@@ -1,0 +1,64 @@
+"""Index-construction throughput (paper §4 build-time discussion):
+single-writer vs multi-writer dynamic build, and static freeze."""
+
+import tempfile
+import threading
+import time
+
+from repro.core import DynamicIndex, Warren, index_document, write_static
+from repro.data.synth import doc_generator
+
+
+def run(n_docs: int = 1500, n_writers: int = 4):
+    # single writer
+    w = Warren(DynamicIndex())
+    docs = list(doc_generator(0, n_docs))
+    t0 = time.time()
+    with w:
+        w.transaction()
+        for docid, text in docs:
+            index_document(w, text, docid=docid)
+        w.commit()
+    single_s = time.time() - t0
+
+    # multi writer (one txn per chunk per thread)
+    w2 = Warren(DynamicIndex())
+    per = n_docs // n_writers
+    t0 = time.time()
+
+    def worker(tid):
+        wc = w2.clone()
+        chunk = docs[tid * per:(tid + 1) * per]
+        for i in range(0, len(chunk), 64):
+            with wc:
+                wc.transaction()
+                for docid, text in chunk[i:i + 64]:
+                    index_document(wc, text, docid=docid)
+                wc.commit()
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_writers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    multi_s = time.time() - t0
+    w2.index.merge_segments()
+
+    with tempfile.TemporaryDirectory() as td:
+        t0 = time.time()
+        write_static(w.index, td + "/s")
+        static_s = time.time() - t0
+
+    tok = sum(len(t.split()) for _, t in docs)
+    print(f"# {n_docs} docs, ~{tok} words")
+    print(f"single-writer dynamic: {single_s:6.2f}s "
+          f"({n_docs / single_s:7.0f} docs/s)")
+    print(f"{n_writers}-writer dynamic:     {multi_s:6.2f}s "
+          f"({n_docs / multi_s:7.0f} docs/s)")
+    print(f"static freeze:         {static_s:6.2f}s")
+    return {"single_s": single_s, "multi_s": multi_s, "static_s": static_s}
+
+
+if __name__ == "__main__":
+    run()

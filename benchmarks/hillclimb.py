@@ -1,0 +1,151 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb: hypothesis → change → re-lower → measure, for the three
+chosen (arch × shape) pairs.  Each variant is lowered at scan-unroll 1 and 2
+(two-point correction, see benchmarks/roofline.py) and the corrected
+roofline terms are appended to experiments/perf_iterations.jsonl.
+
+  PYTHONPATH=src python benchmarks/hillclimb.py [--pair N]
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+
+from repro.configs import get_arch
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.roofline import analyze, correct_scan_once  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                   "perf_iterations.jsonl")
+
+
+def measure(arch, shape, mesh, label, fsdp="auto"):
+    r1 = run_cell(arch, shape, mesh, "pod16x16", fsdp_mode=fsdp, unroll=1)
+    if not r1["ok"]:
+        return {"ok": False, "label": label, "error": r1["error"]}
+    r2 = run_cell(arch, shape, mesh, "pod16x16", fsdp_mode=fsdp, unroll=2)
+    rec = analyze(correct_scan_once(r1, r2 if r2["ok"] else None))
+    return {"ok": True, "label": label, "arch": arch, "shape": shape,
+            "terms": rec["terms"], "bound": rec["bound"],
+            "mem_gib": rec.get("memory", {}).get("peak_bytes", 0) / 2**30,
+            "useful_ratio": rec.get("useful_ratio"),
+            "collectives": {k: v["bytes"] for k, v in
+                            rec.get("collectives", {}).items()}}
+
+
+def log(rec, hypothesis=""):
+    rec["hypothesis"] = hypothesis
+    with open(OUT, "a") as fh:
+        fh.write(json.dumps(rec) + "\n")
+    if rec["ok"]:
+        t = rec["terms"]
+        print(f"  [{rec['label']}] compute {t['compute_s']:.3e}s  "
+              f"memory {t['memory_s']:.3e}s  coll {t['collective_s']:.3e}s  "
+              f"bound={rec['bound']}  mem/dev={rec['mem_gib']:.1f}GiB",
+              flush=True)
+    else:
+        print(f"  [{rec['label']}] FAILED: {rec['error'][:200]}", flush=True)
+
+
+def with_config(arch, **replacements):
+    """Temporarily replace the registered full config."""
+    spec = get_arch(arch)
+    original = spec.config
+    spec.config = dataclasses.replace(original, **replacements)
+    return original
+
+
+def pair1(mesh):
+    """qwen2.5-14b × prefill_32k — collective+memory bound.
+
+    H1: the [B,H,G,S,S] attention scores (34 GiB/dev at S=32k) dominate the
+    memory term and force GSPMD to reshard giant activations (the collective
+    term).  Blocked flash-style attention (q_chunk × kv_chunk tiles) should
+    cut the memory term by ~S/q_chunk on the attention part and remove the
+    reshards.  Predicted: memory term ↓ 5-10×, collective ↓ 2×+."""
+    arch, shape = "qwen2.5-14b", "prefill_32k"
+    print(f"== pair 1: {arch} × {shape}")
+    log(measure(arch, shape, mesh, "baseline"),
+        "paper-agnostic baseline: full-matrix causal attention")
+    orig = with_config(arch, attn_chunk_q=512, attn_chunk_kv=1024)
+    try:
+        log(measure(arch, shape, mesh, "it1-chunked-attn-512x1024"),
+            "H1: blocked attention kills O(S^2) scores memory + reshards")
+        get_arch(arch).config = dataclasses.replace(
+            orig, attn_chunk_q=2048, attn_chunk_kv=4096)
+        log(measure(arch, shape, mesh, "it2-chunked-attn-2048x4096"),
+            "H2: bigger tiles amortize scan overhead; memory term still "
+            "bounded, fewer loop iterations -> less per-step overhead")
+    finally:
+        get_arch(arch).config = orig
+
+
+def pair2(mesh):
+    """qwen3-moe-235b × train_4k — worst roofline fraction, memory bound.
+
+    H1: GSPMD materializes the [E,C,D] dispatch buffers replicated (or
+    gathers x to all experts) because nothing pins their layout; explicit
+    with_sharding_constraint (E on 'model', C on 'data') turns dispatch into
+    an all-to-all and shrinks the memory term several ×.
+    H2: on top, blocked attention removes the S=4k score matrices."""
+    arch, shape = "qwen3-moe-235b-a22b", "train_4k"
+    print(f"== pair 2: {arch} × {shape}")
+    log(measure(arch, shape, mesh, "baseline"),
+        "baseline: unconstrained MoE dispatch layout")
+    orig = with_config(arch, moe_shard="all")
+    try:
+        log(measure(arch, shape, mesh, "it1-moe-sharding-constraints"),
+            "H1: pin [E,C,D] to ('model','data') -> a2a dispatch")
+        get_arch(arch).config = dataclasses.replace(
+            orig, moe_shard="all", attn_chunk_q=1024, attn_chunk_kv=2048)
+        log(measure(arch, shape, mesh, "it2-+chunked-attn"),
+            "H2: 4k scores matrices also big at 64 heads; chunk them")
+    finally:
+        get_arch(arch).config = orig
+
+
+def pair3(mesh):
+    """two-tower × train_batch — paper-representative (retrieval), collective
+    bound.
+
+    H1: the in-batch softmax materializes a [65536, 65536] f32 logits matrix
+    (17 GiB) that GSPMD must reshard between the two tower shardings — the
+    entire collective term.  Streaming the log-normalizer over item chunks
+    (never materializing [B,B]) should collapse both memory and collective
+    terms.  Predicted: collective ↓ ~10×, memory ↓ ~3×."""
+    arch, shape = "two-tower-retrieval", "train_batch"
+    print(f"== pair 3: {arch} × {shape}")
+    log(measure(arch, shape, mesh, "baseline"),
+        "baseline: full [B,B] in-batch softmax")
+    orig = with_config(arch, loss_chunk=4096)
+    try:
+        log(measure(arch, shape, mesh, "it1-streamed-softmax-4096"),
+            "H1: stream logsumexp over 4096-item chunks, no [B,B] matrix")
+        get_arch(arch).config = dataclasses.replace(orig, loss_chunk=16384)
+        log(measure(arch, shape, mesh, "it2-streamed-softmax-16384"),
+            "H2: larger chunks -> fewer scan steps, better matmul shapes")
+    finally:
+        get_arch(arch).config = orig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", type=int, default=0, help="0 = all")
+    args = ap.parse_args()
+    mesh = make_production_mesh()
+    pairs = {1: pair1, 2: pair2, 3: pair3}
+    for i, fn in pairs.items():
+        if args.pair in (0, i):
+            fn(mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Paper Fig. 6 analogue: the 9 example queries over the heterogeneous JSON
+collection, timed on both static and dynamic indexes.
+
+Offline stand-in for Özler's MongoDB collection (DESIGN §9.3): matched
+schema heterogeneity, scaled by --scale.
+"""
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import (DynamicIndex, StaticIndex, Warren, add_json,
+                        annotate_dates, write_static)
+from repro.core.gcl import BothOf, ContainedIn, Containing, OneOf, Phrase, Term
+from repro.data.synth import json_collection
+
+
+def build_dynamic(scale: float):
+    w = Warren(DynamicIndex())
+    data = json_collection(seed=0, scale=scale)
+    t0 = time.time()
+    with w:
+        w.transaction()
+        for name, objs in data.items():
+            for obj in objs:
+                add_json(w, obj, collection=f"Files/{name}.json")
+        w.commit()
+    with w:
+        w.transaction()
+        annotate_dates(w, [":created:", ":created_at:$date:", ":date:"])
+        w.commit()
+    build_s = time.time() - t0
+    n = sum(len(v) for v in data.values())
+    return w, n, build_s
+
+
+def _phrase(reader, text):
+    words = text.split()
+    terms = [Term(reader.annotations(t)) for t in words]
+    return terms[0] if len(terms) == 1 else Phrase(terms)
+
+
+def queries(reader):
+    """9 queries; each returns a count or aggregate (reader = warren-like)."""
+    def h(f):
+        return Term(reader.annotations(f))
+
+    def q1():
+        vals = [v for _, _, v in ContainedIn(
+            h(":rating:"), h("Files/restaurant.json")).solutions()]
+        return (min(vals), sum(vals) / len(vals), max(vals))
+
+    def q2():
+        return len(ContainedIn(Containing(h(":city:"),
+                                          _phrase(reader, "new york")),
+                               h("Files/zips.json")).solutions())
+
+    def q3():
+        node = ContainedIn(
+            h(":name:"),
+            Containing(h("Files/companies.json"),
+                       ContainedIn(Containing(h(":category_code:"),
+                                              _phrase(reader, "nanotech")),
+                                   h("Files/companies.json"))))
+        return len(node.solutions())
+
+    def q4():
+        return len(ContainedIn(OneOf(h(":title:"), h(":authors:")),
+                               h("Files/books.json")).solutions())
+
+    def q5():
+        return len(ContainedIn(h(":"), h("Files/trades.json")).solutions())
+
+    def q6():
+        # GROUP BY result over inspections (translate + aggregate)
+        from repro.core.json_store import value_of
+        groups = {}
+        for p, q, _ in ContainedIn(h(":result:"),
+                                   h("Files/city_inspections.json")).solutions():
+            toks = reader.tokens(int(p), int(q))
+            key = " ".join(t for t in toks if len(t) > 1) if toks else "?"
+            groups[key] = groups.get(key, 0) + 1
+        return len(groups)
+
+    def q7():
+        return len(reader.annotations(":"))
+
+    def q8():
+        return len(ContainedIn(h(":title:"),
+                               Containing(h("Files/books.json"),
+                                          h("year=2008"))).solutions())
+
+    def q9():
+        return len(Containing(h(":"), BothOf(h("year=2008"),
+                                             h("month=06"))).solutions())
+
+    return [("1 restaurant rating stats", q1),
+            ("2 zips in New York", q2),
+            ("3 nanotech company names", q3),
+            ("4 book titles+authors", q4),
+            ("5 count trades", q5),
+            ("6 inspections GROUP BY result", q6),
+            ("7 count all objects", q7),
+            ("8 books published 2008", q8),
+            ("9 objects created 2008-06", q9)]
+
+
+def run(scale: float = 1.0, repeats: int = 3):
+    w, n, build_dyn = build_dynamic(scale)
+    with tempfile.TemporaryDirectory() as td:
+        t0 = time.time()
+        write_static(w.index, td + "/static")
+        build_static = time.time() - t0
+        static = StaticIndex(td + "/static")
+
+        rows = []
+        with w:
+            for name, fn in queries(w):
+                t0 = time.time()
+                for _ in range(repeats):
+                    result = fn()
+                dyn_ms = (time.time() - t0) / repeats * 1e3
+                rows.append([name, result, dyn_ms])
+        for row, (name, fn) in zip(rows, queries(static)):
+            t0 = time.time()
+            for _ in range(repeats):
+                result = fn()
+            row.append((time.time() - t0) / repeats * 1e3)
+            assert row[1] == result or isinstance(result, tuple), \
+                f"static/dynamic disagree on {name}"
+        static.close()
+    print(f"# {n} objects; build: dynamic {build_dyn:.2f}s, "
+          f"static {build_static:.2f}s")
+    print(f"{'query':35s} {'result':>18s} {'dynamic':>10s} {'static':>10s}")
+    for name, result, dyn_ms, st_ms in rows:
+        r = (f"{result[1]:.2f}" if isinstance(result, tuple) else str(result))
+        print(f"{name:35s} {r:>18s} {dyn_ms:9.2f}ms {st_ms:9.2f}ms")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Benchmark driver: one section per paper table/figure + engine + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    print("=" * 72)
+    print("1. paper Fig. 6 — JSON store queries (static vs dynamic)")
+    print("=" * 72)
+    from benchmarks import json_queries
+    json_queries.run(scale=0.5 if args.quick else 1.0)
+
+    print()
+    print("=" * 72)
+    print("2. paper Fig. 7 — concurrent readers/writers over evolving index")
+    print("=" * 72)
+    from benchmarks import concurrent_trec
+    concurrent_trec.run(n_years=2 if args.quick else 3,
+                        files_per_year=4 if args.quick else 6)
+
+    print()
+    print("=" * 72)
+    print("3. paper §4 — index build throughput")
+    print("=" * 72)
+    from benchmarks import build_throughput
+    build_throughput.run(n_docs=600 if args.quick else 1500)
+
+    print()
+    print("=" * 72)
+    print("4. query engines: lazy host vs vectorized vs Pallas")
+    print("=" * 72)
+    from benchmarks import engine_compare
+    if args.quick:
+        engine_compare.bench_joins(sizes=(1000, 10_000))
+        engine_compare.bench_bm25(n_docs=50_000, postings=5_000)
+    else:
+        engine_compare.run()
+
+    print()
+    print("=" * 72)
+    print("5. roofline from the multi-pod dry-run")
+    print("=" * 72)
+    from benchmarks import roofline
+    roofline.main()
+
+    print(f"\ntotal benchmark time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

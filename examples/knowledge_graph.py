@@ -1,0 +1,98 @@
+"""Knowledge graph over the annotative index (paper §2.5 + Conclusion).
+
+Entities are JSON objects; subject-predicate-object triples are annotations;
+the same index serves BM25 text retrieval AND graph traversal — the paper's
+lifelogging/RAG vision: "ranked retrieval and structured queries to a
+knowledge graph linked with the experiences".
+
+    PYTHONPATH=src python examples/knowledge_graph.py
+"""
+
+from repro.core import DynamicIndex, GraphStore, Warren, score_bm25
+from repro.core.json_store import value_of
+from repro.core.query import solve
+from repro.core.ranking import index_document
+
+
+def main():
+    w = Warren(DynamicIndex())
+    g = GraphStore(w)
+
+    # -- entities + triples ------------------------------------------- #
+    with w:
+        w.transaction()
+        ent = {}
+        for name, kind in [("Meryl Streep", "person"),
+                           ("Best Actress", "award"),
+                           ("The Iron Lady", "movie"),
+                           ("Margaret Thatcher", "person"),
+                           ("Kramer vs Kramer", "movie")]:
+            ent[name] = g.add_node({"name": name, "kind": kind})
+        remap = w.commit()
+    ent = {k: (remap(a), remap(b)) for k, (a, b) in ent.items()}
+
+    with w:
+        w.transaction()
+        g.add_triple(ent["Meryl Streep"][0], "won_award",
+                     ent["Best Actress"][0])
+        g.add_triple(ent["Meryl Streep"][0], "starred_in",
+                     ent["The Iron Lady"][0])
+        g.add_triple(ent["Meryl Streep"][0], "starred_in",
+                     ent["Kramer vs Kramer"][0])
+        g.add_triple(ent["The Iron Lady"][0], "depicts",
+                     ent["Margaret Thatcher"][0])
+        w.commit()
+
+    # -- free text linked to the same address space -------------------- #
+    with w:
+        w.transaction()
+        lo, hi = index_document(
+            w, "watched a film about a british prime minister on the plane "
+               "last weekend, outstanding lead performance", docid="diary1")
+        remap2 = w.commit()
+    lo = remap2(lo)
+    with w:
+        w.transaction()
+        # link the diary entry to the movie entity (annotate-later!)
+        g.add_edge("@mentions", lo, ent["The Iron Lady"][0])
+        w.commit()
+
+    # -- queries --------------------------------------------------------- #
+    with w:
+        print("movies starring Meryl Streep:")
+        for addr in g.objects_of(ent["Meryl Streep"], "starred_in"):
+            obj = g.containing_object(addr)
+            t = solve("[:name:]", w)
+            name = value_of(w, *[s[:2] for s in t
+                                 if obj[0] <= s[0] <= obj[1]][0])
+            print("  -", name)
+
+        print("who does The Iron Lady depict?")
+        for addr in g.objects_of(ent["The Iron Lady"], "depicts"):
+            obj = g.containing_object(addr)
+            names = [s for s in solve("[:name:]", w)
+                     if obj[0] <= s[0] <= obj[1]]
+            print("  -", value_of(w, *names[0][:2]))
+
+        print("RAG hop: text search → mentioned entity → graph:")
+        top = score_bm25(w, "film prime minister plane weekend", k=1)
+        d_lo = top[0][0]
+        doc = g.containing_object(d_lo) or (d_lo, d_lo)
+        for dst in g.neighbors("@mentions", d_lo, d_lo + 50):
+            movie = g.containing_object(dst)
+            names = [s for s in solve("[:name:]", w)
+                     if movie[0] <= s[0] <= movie[1]]
+            movie_name = value_of(w, *names[0][:2])
+            print(f"  diary entry mentions {movie_name!r}; its stars:")
+            # reverse edge: who starred_in this movie
+            rel = w.annotations("@rel:starred_in")
+            for p, q, v in rel:
+                if int(v) == movie[0]:
+                    person = g.containing_object(int(p))
+                    pn = [s for s in solve("[:name:]", w)
+                          if person[0] <= s[0] <= person[1]]
+                    print("   -", value_of(w, *pn[0][:2]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .base import ArchSpec, Cell
+from .registry import ARCHS, all_cells, get_arch
+
+__all__ = ["ArchSpec", "Cell", "ARCHS", "all_cells", "get_arch"]

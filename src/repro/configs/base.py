@@ -1,0 +1,58 @@
+"""ArchSpec: uniform interface every assigned architecture implements.
+
+An ArchSpec knows how to
+  * build its full config (the assigned public-literature scale) and a
+    reduced smoke config,
+  * init params (concretely, or abstractly via jax.eval_shape),
+  * produce loss/serve functions,
+  * describe ShapeDtypeStruct inputs for each of its shape cells
+    (`input_specs`), including whether the cell lowers train_step or
+    serve_step,
+  * generate small concrete batches for smoke tests (`smoke_batch`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+f32 = jnp.float32
+bf16 = jnp.bfloat16
+i32 = jnp.int32
+
+
+def sds(shape, dtype=f32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass
+class Cell:
+    """One (arch × input-shape) dry-run cell."""
+    shape_name: str
+    kind: str                     # "train" | "serve"
+    batch_specs: Dict[str, Any]   # name -> ShapeDtypeStruct (model inputs)
+    note: str = ""
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    name: str
+    family: str                   # "lm" | "gnn" | "recsys"
+    config: Any                   # full assigned config
+    smoke_config: Any             # reduced config
+    init_fn: Callable             # (cfg, key) -> params
+    loss_fn: Callable             # (params, cfg, batch) -> scalar
+    serve_fn: Optional[Callable]  # (params, cfg, batch) -> outputs
+    cells: Callable               # (cfg) -> Dict[shape_name, Cell]
+    smoke_batch: Callable         # (cfg, kind, seed) -> concrete batch dict
+    # decode-style serving needs a cache spec builder
+    cache_spec: Optional[Callable] = None   # (cfg, batch, seq) -> pytree of SDS
+
+    def abstract_params(self, cfg=None):
+        cfg = cfg or self.config
+        return jax.eval_shape(lambda k: self.init_fn(cfg, k),
+                              jax.random.PRNGKey(0))

@@ -1,0 +1,107 @@
+"""NequIP arch × the four assigned GNN shape cells.
+
+  full_graph_sm  2,708 nodes / 10,556 edges / d_feat 1,433  (full-batch)
+  minibatch_lg   232,965-node graph, sampled: 1,024 seeds, fanout 15-10
+  ogb_products   2,449,029 nodes / 61,859,140 edges / d_feat 100
+  molecule       128 graphs × 30 nodes / 64 edges (energy + forces)
+
+NequIP is an interatomic potential; the generic graph cells are mapped onto
+it as *spatial graphs*: every node carries a position (the geometry the
+equivariant tensor products consume) plus optional high-dim features; the
+classification shapes use a node-classification head (DESIGN §6).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import synth
+from repro.models import nequip as NQ
+
+from .base import ArchSpec, Cell, f32, i32, sds
+
+def _pad512(n: int) -> int:
+    """Graph arrays are padded to a 512-multiple so they shard on any mesh
+    axis combination (padding = masked nodes/edges, standard practice)."""
+    return -(-n // 512) * 512
+
+
+# sampled-subgraph padded sizes for minibatch_lg (1024 seeds, fanout 15-10)
+_MB_NODES = 1024 + 1024 * 15 + 1024 * 150          # padded upper bound
+_MB_EDGES = 1024 * 15 + 1024 * 15 * 10
+
+SHAPES = {
+    "full_graph_sm": dict(n=_pad512(2708), e=_pad512(10_556), d_feat=1433,
+                          n_classes=7, kind="train"),
+    "minibatch_lg": dict(n=_pad512(_MB_NODES), e=_pad512(_MB_EDGES),
+                         d_feat=602, n_classes=41, kind="train"),
+    "ogb_products": dict(n=_pad512(2_449_029), e=_pad512(61_859_140),
+                         d_feat=100, n_classes=47, kind="train"),
+    "molecule": dict(n=_pad512(128 * 30), e=_pad512(128 * 64), d_feat=0,
+                     n_classes=0, kind="train", n_graphs=128),
+}
+
+
+def gnn_cells(cfg: NQ.NequipConfig) -> Dict[str, Cell]:
+    cells = {}
+    for name, sh in SHAPES.items():
+        specs = {
+            "positions": sds((sh["n"], 3), f32),
+            "species": sds((sh["n"],), i32),
+            "senders": sds((sh["e"],), i32),
+            "receivers": sds((sh["e"],), i32),
+        }
+        if sh["n_classes"]:
+            specs["node_feats"] = sds((sh["n"], sh["d_feat"]), f32)
+            specs["labels"] = sds((sh["n"],), i32)
+            specs["label_mask"] = sds((sh["n"],), f32)
+        else:
+            specs["graph_ids"] = sds((sh["n"],), i32)
+            specs["energies"] = sds((sh["n_graphs"],), f32)
+            specs["forces"] = sds((sh["n"], 3), f32)
+        cells[name] = Cell(name, "train", specs,
+                           note=f"{sh['n']} nodes / {sh['e']} edges")
+    return cells
+
+
+def gnn_smoke_batch(cfg: NQ.NequipConfig, kind: str, seed: int = 0):
+    if cfg.n_classes:
+        g = synth.random_graph(seed, 64, 256, d_feat=cfg.d_feat,
+                               n_classes=cfg.n_classes)
+        return g
+    b = synth.molecule_batch(seed, batch=4, n_nodes=8, n_edges=16)
+    return b
+
+
+def cfg_for_cell(cfg: NQ.NequipConfig, shape_name: str) -> NQ.NequipConfig:
+    """Shape cells differ in head (classes) and input feature width."""
+    sh = SHAPES[shape_name]
+    import dataclasses
+    return dataclasses.replace(cfg, d_feat=sh["d_feat"],
+                               n_classes=sh["n_classes"])
+
+
+NEQUIP = NQ.NequipConfig(name="nequip", n_layers=5, d_hidden=32, l_max=2,
+                         n_rbf=8, cutoff=5.0)
+
+NEQUIP_SMOKE = NQ.NequipConfig(name="nequip-smoke", n_layers=2, d_hidden=8,
+                               n_rbf=4, cutoff=5.0, d_feat=16, n_classes=5)
+
+
+def make_gnn_spec() -> ArchSpec:
+    return ArchSpec(
+        name="nequip", family="gnn", config=NEQUIP, smoke_config=NEQUIP_SMOKE,
+        init_fn=NQ.init_params,
+        loss_fn=lambda p, c, b: NQ.loss_fn(p, c, b),
+        serve_fn=lambda p, c, b: NQ.classify(p, c, b["positions"],
+                                             b["species"], b["senders"],
+                                             b["receivers"],
+                                             b.get("node_feats")),
+        cells=gnn_cells, smoke_batch=gnn_smoke_batch,
+    )
+
+
+GNN_SPECS = {"nequip": make_gnn_spec()}

@@ -1,0 +1,123 @@
+"""The five assigned LM-family transformers, their shapes, and smoke configs.
+
+Shapes (assigned):
+  train_4k     seq 4,096  × global_batch 256   (train_step)
+  prefill_32k  seq 32,768 × global_batch 32    (serve: prefill)
+  decode_32k   one token, KV cache 32,768, batch 128   (serve: decode)
+  long_500k    one token, KV cache 524,288, batch 1    (serve: decode)
+
+All five archs are full-attention GQA, so 500k *prefill* is skipped
+(quadratic — DESIGN §6); 500k *decode* runs via sequence-sharded KV.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import synth
+from repro.models import transformer as T
+
+from .base import ArchSpec, Cell, bf16, i32, sds
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32_768, batch=32, kind="serve_prefill"),
+    "decode_32k": dict(seq=32_768, batch=128, kind="serve_decode"),
+    "long_500k": dict(seq=524_288, batch=1, kind="serve_decode"),
+}
+
+
+def lm_cells(cfg: T.TransformerConfig) -> Dict[str, Cell]:
+    cells = {}
+    for name, sh in SHAPES.items():
+        if sh["kind"] == "train":
+            specs = {"tokens": sds((sh["batch"], sh["seq"]), i32),
+                     "labels": sds((sh["batch"], sh["seq"]), i32)}
+            cells[name] = Cell(name, "train", specs)
+        elif sh["kind"] == "serve_prefill":
+            specs = {"tokens": sds((sh["batch"], sh["seq"]), i32)}
+            cells[name] = Cell(name, "serve", specs, note="prefill")
+        else:
+            specs = {"tokens": sds((sh["batch"],), i32)}
+            cells[name] = Cell(name, "serve", specs,
+                               note=f"decode kv={sh['seq']}")
+    return cells
+
+
+def lm_cache_spec(cfg: T.TransformerConfig, batch: int, seq: int):
+    shape = (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim)
+    dt = cfg.jnp_dtype
+    return {"k": sds(shape, dt), "v": sds(shape, dt),
+            "length": sds((batch,), i32)}
+
+
+def lm_smoke_batch(cfg: T.TransformerConfig, kind: str, seed: int = 0):
+    if kind == "train":
+        gen = synth.token_batches(seed, cfg.vocab, batch=2, seq_len=64)
+        b = next(gen)
+        return {"tokens": b["tokens"], "labels": b["labels"]}
+    rng = np.random.default_rng(seed)
+    return {"tokens": rng.integers(0, cfg.vocab, size=(2,), dtype=np.int32)}
+
+
+def _smoke(cfg: T.TransformerConfig, **over) -> T.TransformerConfig:
+    base = dict(
+        name=cfg.name + "-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=max(1, 4 // cfg.group_size if cfg.group_size <= 4 else 1),
+        head_dim=16, d_ff=128, vocab=512, qkv_bias=cfg.qkv_bias,
+        qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta, max_seq_len=256,
+        dtype="float32", remat=False,
+    )
+    if cfg.moe is not None:
+        base["moe"] = T.MoEConfig(
+            n_experts=8, top_k=min(cfg.moe.top_k, 4),
+            d_expert_ff=32,
+            n_shared=cfg.moe.n_shared, d_shared_ff=64 if cfg.moe.n_shared else 0)
+    base.update(over)
+    return T.TransformerConfig(**base)
+
+
+def make_lm_spec(cfg: T.TransformerConfig) -> ArchSpec:
+    return ArchSpec(
+        name=cfg.name, family="lm", config=cfg, smoke_config=_smoke(cfg),
+        init_fn=T.init_params,
+        loss_fn=lambda p, c, b: T.loss_fn(p, b, c),
+        serve_fn=None,  # family dispatch in launch/dryrun (prefill vs decode)
+        cells=lm_cells, smoke_batch=lm_smoke_batch, cache_spec=lm_cache_spec,
+    )
+
+
+# -- the five assigned configs [source; verified-tier in assignment] -------- #
+QWEN2_5_14B = T.TransformerConfig(
+    name="qwen2.5-14b", n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=13824, vocab=152_064, head_dim=128, qkv_bias=True, rope_theta=1e6)
+
+YI_9B = T.TransformerConfig(
+    name="yi-9b", n_layers=48, d_model=4096, n_heads=32, n_kv_heads=4,
+    d_ff=11008, vocab=64_000, head_dim=128, rope_theta=1e4)
+
+INTERNLM2_1_8B = T.TransformerConfig(
+    name="internlm2-1.8b", n_layers=24, d_model=2048, n_heads=16,
+    n_kv_heads=8, d_ff=8192, vocab=92_544, head_dim=128, rope_theta=1e6)
+
+QWEN3_MOE_235B = T.TransformerConfig(
+    name="qwen3-moe-235b-a22b", n_layers=94, d_model=4096, n_heads=64,
+    n_kv_heads=4, d_ff=1536, vocab=151_936, head_dim=128, qk_norm=True,
+    rope_theta=1e6,
+    moe=T.MoEConfig(n_experts=128, top_k=8, d_expert_ff=1536))
+
+QWEN2_MOE_A2_7B = T.TransformerConfig(
+    name="qwen2-moe-a2.7b", n_layers=24, d_model=2048, n_heads=16,
+    n_kv_heads=16, d_ff=1408, vocab=151_936, head_dim=128, qkv_bias=True,
+    rope_theta=1e6,
+    moe=T.MoEConfig(n_experts=60, top_k=4, d_expert_ff=1408,
+                    n_shared=4, d_shared_ff=5632))
+
+LM_SPECS = {c.name: make_lm_spec(c) for c in
+            [QWEN2_5_14B, YI_9B, INTERNLM2_1_8B, QWEN3_MOE_235B,
+             QWEN2_MOE_A2_7B]}

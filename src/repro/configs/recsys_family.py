@@ -1,0 +1,158 @@
+"""The four assigned recsys architectures × their shape cells.
+
+  train_batch     batch 65,536      (training)
+  serve_p99       batch 512         (online inference)
+  serve_bulk      batch 262,144     (offline scoring)
+  retrieval_cand  batch 1 × 1,000,000 candidates (retrieval scoring)
+
+retrieval_cand semantics per arch: two-tower and SASRec score one query
+against 1M candidate item embeddings (batched dot, not a loop); DLRM and
+xDeepFM score 1M candidate feature rows for one request (offline-scoring
+formulation) — noted in DESIGN §6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import synth
+from repro.models import recsys as R
+
+from .base import ArchSpec, Cell, f32, i32, sds
+
+BATCHES = {"train_batch": 65_536, "serve_p99": 512, "serve_bulk": 262_144}
+N_CAND = 1_000_000
+HIST_LEN = 8
+
+
+# --------------------------------------------------------------------- #
+def dlrm_cells(cfg: R.DLRMConfig) -> Dict[str, Cell]:
+    def specs(b):
+        return {"dense": sds((b, cfg.n_dense), f32),
+                "sparse": sds((b, cfg.n_sparse), i32),
+                "labels": sds((b,), f32)}
+    cells = {n: Cell(n, "train" if n == "train_batch" else "serve", specs(b))
+             for n, b in BATCHES.items()}
+    cells["retrieval_cand"] = Cell("retrieval_cand", "serve", specs(N_CAND),
+                                   note="1M candidate rows, one request")
+    return cells
+
+
+def xdeepfm_cells(cfg: R.XDeepFMConfig) -> Dict[str, Cell]:
+    def specs(b):
+        return {"sparse": sds((b, cfg.n_sparse), i32), "labels": sds((b,), f32)}
+    cells = {n: Cell(n, "train" if n == "train_batch" else "serve", specs(b))
+             for n, b in BATCHES.items()}
+    cells["retrieval_cand"] = Cell("retrieval_cand", "serve", specs(N_CAND),
+                                   note="1M candidate rows, one request")
+    return cells
+
+
+def twotower_cells(cfg: R.TwoTowerConfig) -> Dict[str, Cell]:
+    def specs(b):
+        return {"user_ids": sds((b,), i32),
+                "hist_ids": sds((b, HIST_LEN), i32),
+                "hist_w": sds((b, HIST_LEN), f32),
+                "item_ids": sds((b,), i32),
+                "logq": sds((b,), f32)}
+    cells = {n: Cell(n, "train" if n == "train_batch" else "serve", specs(b))
+             for n, b in BATCHES.items()}
+    cells["retrieval_cand"] = Cell(
+        "retrieval_cand", "serve",
+        {"user_ids": sds((1,), i32), "hist_ids": sds((1, HIST_LEN), i32),
+         "hist_w": sds((1, HIST_LEN), f32), "cand_ids": sds((N_CAND,), i32)},
+        note="1 query × 1M candidates, sharded matmul")
+    return cells
+
+
+def sasrec_cells(cfg: R.SASRecConfig) -> Dict[str, Cell]:
+    def specs(b):
+        return {"item_seq": sds((b, cfg.seq_len), i32),
+                "pos_items": sds((b, cfg.seq_len), i32),
+                "neg_items": sds((b, cfg.seq_len), i32)}
+    cells = {n: Cell(n, "train" if n == "train_batch" else "serve", specs(b))
+             for n, b in BATCHES.items()}
+    cells["retrieval_cand"] = Cell(
+        "retrieval_cand", "serve",
+        {"item_seq": sds((1, cfg.seq_len), i32), "cand_ids": sds((N_CAND,), i32)},
+        note="1 user history × 1M candidate items")
+    return cells
+
+
+# --------------------------------------------------------------------- #
+def dlrm_smoke_batch(cfg, kind, seed=0):
+    return synth.dlrm_batch(seed, 8, cfg.n_dense, cfg.n_sparse,
+                            cfg.vocab_per_table)
+
+
+def xdeepfm_smoke_batch(cfg, kind, seed=0):
+    return synth.xdeepfm_batch(seed, 8, cfg.n_sparse, cfg.vocab_per_table)
+
+
+def twotower_smoke_batch(cfg, kind, seed=0):
+    b = synth.twotower_batch(seed, 8, cfg.n_users, cfg.n_items, HIST_LEN)
+    if kind == "serve":
+        b["cand_ids"] = np.arange(64, dtype=np.int32) % cfg.n_items
+    return b
+
+
+def sasrec_smoke_batch(cfg, kind, seed=0):
+    b = synth.sasrec_batch(seed, 8, cfg.seq_len, cfg.n_items)
+    if kind == "serve":
+        b["cand_ids"] = (np.arange(64, dtype=np.int32) % cfg.n_items)
+    return b
+
+
+# --------------------------------------------------------------------- #
+DLRM_RM2 = R.DLRMConfig()
+DLRM_SMOKE = dataclasses.replace(DLRM_RM2, name="dlrm-smoke",
+                                 vocab_per_table=1000, n_sparse=6,
+                                 bot_mlp=(13, 32, 16), top_mlp=(32, 16, 1),
+                                 embed_dim=16)
+XDEEPFM = R.XDeepFMConfig()
+XDEEPFM_SMOKE = dataclasses.replace(XDEEPFM, name="xdeepfm-smoke",
+                                    vocab_per_table=500, n_sparse=6,
+                                    cin_layers=(8, 8), mlp=(16,), embed_dim=4)
+TWOTOWER = R.TwoTowerConfig()
+TWOTOWER_SMOKE = dataclasses.replace(TWOTOWER, name="two-tower-smoke",
+                                     n_users=1000, n_items=500,
+                                     tower_mlp=(32, 16), embed_dim=16)
+SASREC = R.SASRecConfig()
+SASREC_SMOKE = dataclasses.replace(SASREC, name="sasrec-smoke", n_items=200,
+                                   embed_dim=16, seq_len=20)
+
+RECSYS_SPECS = {
+    "dlrm-rm2": ArchSpec(
+        name="dlrm-rm2", family="recsys", config=DLRM_RM2,
+        smoke_config=DLRM_SMOKE, init_fn=R.dlrm_init,
+        loss_fn=lambda p, c, b: R.dlrm_loss(p, c, b),
+        serve_fn=lambda p, c, b: R.dlrm_forward(p, c, b["dense"], b["sparse"]),
+        cells=dlrm_cells, smoke_batch=dlrm_smoke_batch),
+    "xdeepfm": ArchSpec(
+        name="xdeepfm", family="recsys", config=XDEEPFM,
+        smoke_config=XDEEPFM_SMOKE, init_fn=R.xdeepfm_init,
+        loss_fn=lambda p, c, b: R.xdeepfm_loss(p, c, b),
+        serve_fn=lambda p, c, b: R.xdeepfm_forward(p, c, b["sparse"]),
+        cells=xdeepfm_cells, smoke_batch=xdeepfm_smoke_batch),
+    "two-tower-retrieval": ArchSpec(
+        name="two-tower-retrieval", family="recsys", config=TWOTOWER,
+        smoke_config=TWOTOWER_SMOKE, init_fn=R.twotower_init,
+        loss_fn=lambda p, c, b: R.twotower_loss(p, c, b),
+        serve_fn=lambda p, c, b: (
+            R.twotower_score_candidates(p, c, b) if "cand_ids" in b
+            else R.twotower_user_embed(p, c, b["user_ids"], b["hist_ids"],
+                                       b["hist_w"])),
+        cells=twotower_cells, smoke_batch=twotower_smoke_batch),
+    "sasrec": ArchSpec(
+        name="sasrec", family="recsys", config=SASREC,
+        smoke_config=SASREC_SMOKE, init_fn=R.sasrec_init,
+        loss_fn=lambda p, c, b: R.sasrec_loss(p, c, b),
+        serve_fn=lambda p, c, b: (
+            R.sasrec_score_candidates(p, c, b) if "cand_ids" in b
+            else R.sasrec_encode(p, c, b["item_seq"])),
+        cells=sasrec_cells, smoke_batch=sasrec_smoke_batch),
+}

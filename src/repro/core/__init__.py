@@ -1,0 +1,36 @@
+"""Annotative indexing core (Clarke 2024), paper-faithful reference layer."""
+
+from .annotation import (INF, NINF, Annotation, AnnotationList, merge_lists,
+                         reduce_minimal)
+from .featurizer import (HashingFeaturizer, JsonFeaturizer, VocabFeaturizer,
+                         murmur64a)
+from .gcl import (BothOf, ContainedIn, Containing, FollowedBy, GCLNode,
+                  NotContainedIn, NotContaining, OneOf, Phrase, Term,
+                  both_of_all, one_of_all)
+from .graph_store import GraphStore
+from .index import DynamicIndex, Segment, Snapshot, Transaction
+from .json_store import add_json, annotate_dates, render_tokens, value_of
+from .ranking import (average_precision, build_block_impacts, collection_stats,
+                      expand_query, index_document, score_blockmax, score_bm25,
+                      score_wand)
+from .query import parse_query, solve
+from .sparse import index_sparse_vector, score_hybrid, score_sparse
+from .static import StaticIndex, write_static
+from .stemmer import porter_stem
+from .tokenizer import AsciiTokenizer, Utf8Tokenizer
+from .warren import Warren
+
+__all__ = [
+    "INF", "NINF", "Annotation", "AnnotationList", "merge_lists",
+    "reduce_minimal", "HashingFeaturizer", "JsonFeaturizer", "VocabFeaturizer",
+    "murmur64a", "BothOf", "ContainedIn", "Containing", "FollowedBy",
+    "GCLNode", "NotContainedIn", "NotContaining", "OneOf", "Phrase", "Term",
+    "both_of_all", "one_of_all", "GraphStore", "DynamicIndex", "Segment",
+    "Snapshot", "Transaction", "add_json", "annotate_dates", "render_tokens",
+    "value_of", "average_precision", "build_block_impacts", "collection_stats",
+    "expand_query", "index_document", "score_blockmax", "score_bm25",
+    "score_wand", "StaticIndex", "write_static", "porter_stem",
+    "parse_query", "solve", "index_sparse_vector", "score_hybrid",
+    "score_sparse",
+    "AsciiTokenizer", "Utf8Tokenizer", "Warren",
+]

@@ -1,0 +1,116 @@
+"""Durable transaction log for the dynamic index (paper §5).
+
+Append-only file of zstd-compressed msgpack frames:
+
+  {"t": "ready",  "seq": n, "base": p, "length": L, ...payload}
+  {"t": "commit", "seq": n}
+  {"t": "abort",  "seq": n}
+
+``ready`` records are written (and fsynced) during the first phase of the
+two-phase commit; the transaction is durable once its ``commit`` frame is on
+disk.  Recovery replays the log: ready-without-commit ⇒ aborted, its address
+interval becomes a gap.  ``compact`` rewrites the log as a single merged
+snapshot frame plus the tail of still-live transactions.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+import threading
+from typing import Any, Dict, Iterator, List, Optional
+
+import msgpack
+import zstandard
+
+_MAGIC = b"ANOTLOG1"
+
+
+class TransactionLog:
+    def __init__(self, path: Optional[str]):
+        """path=None gives an in-memory (non-durable) log, useful for tests."""
+        self.path = path
+        self._lock = threading.Lock()
+        self._cctx = zstandard.ZstdCompressor(level=3)
+        self._dctx = zstandard.ZstdDecompressor()
+        self._fh = None
+        self._mem: List[bytes] = []
+        if path is not None:
+            exists = os.path.exists(path)
+            self._fh = open(path, "ab")
+            if not exists or os.path.getsize(path) == 0:
+                self._fh.write(_MAGIC)
+                self._fh.flush()
+                os.fsync(self._fh.fileno())
+
+    # ------------------------------------------------------------------ #
+    def _write_frame(self, record: Dict[str, Any], sync: bool = True) -> None:
+        payload = self._cctx.compress(msgpack.packb(record, use_bin_type=True))
+        frame = struct.pack("<I", len(payload)) + payload
+        with self._lock:
+            if self._fh is not None:
+                self._fh.write(frame)
+                self._fh.flush()
+                if sync:
+                    os.fsync(self._fh.fileno())
+            else:
+                self._mem.append(frame)
+
+    def append(self, record: Dict[str, Any], sync: bool = True) -> None:
+        self._write_frame(record, sync=sync)
+
+    def replay(self) -> Iterator[Dict[str, Any]]:
+        if self.path is not None:
+            with self._lock:
+                if self._fh is not None:
+                    self._fh.flush()
+            with open(self.path, "rb") as fh:
+                magic = fh.read(len(_MAGIC))
+                if magic != _MAGIC:
+                    return
+                while True:
+                    hdr = fh.read(4)
+                    if len(hdr) < 4:
+                        return
+                    (n,) = struct.unpack("<I", hdr)
+                    payload = fh.read(n)
+                    if len(payload) < n:
+                        return  # torn tail frame: treat as not written
+                    yield msgpack.unpackb(self._dctx.decompress(payload),
+                                          raw=False, strict_map_key=False)
+        else:
+            with self._lock:
+                frames = list(self._mem)
+            for frame in frames:
+                (n,) = struct.unpack("<I", frame[:4])
+                yield msgpack.unpackb(self._dctx.decompress(frame[4:4 + n]),
+                                      raw=False, strict_map_key=False)
+
+    def compact(self, snapshot_records: List[Dict[str, Any]]) -> None:
+        """Atomically replace the log with the given records."""
+        if self.path is None:
+            with self._lock:
+                self._mem = []
+            for r in snapshot_records:
+                self._write_frame(r, sync=False)
+            return
+        tmp = self.path + ".compact"
+        cctx = self._cctx
+        with open(tmp, "wb") as fh:
+            fh.write(_MAGIC)
+            for r in snapshot_records:
+                payload = cctx.compress(msgpack.packb(r, use_bin_type=True))
+                fh.write(struct.pack("<I", len(payload)) + payload)
+            fh.flush()
+            os.fsync(fh.fileno())
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+            os.replace(tmp, self.path)
+            self._fh = open(self.path, "ab")
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None

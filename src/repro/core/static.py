@@ -1,0 +1,172 @@
+"""Static index: larger-than-memory collections, batch update model (paper §3).
+
+Built once (one batch transaction), written to a directory:
+
+  meta.msgpack           address span, counts
+  features.msgpack       fval -> (offset, nbytes, count) into postings.bin
+  postings.bin           per-feature vByte-gap starts/ends + raw values
+  content.bin            zstd msgpack append records
+
+Reads decode one feature at a time (LRU cached) — annotation lists are
+"compressed until active".  Batch update = build a merged directory from the
+current one plus new documents, then atomic rename; a lock file enforces the
+single-transaction rule.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+import threading
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import msgpack
+import numpy as np
+import zstandard
+
+from . import vbyte
+from .annotation import AnnotationList
+from .featurizer import Featurizer, JsonFeaturizer
+from .gcl import Term
+from .index import DynamicIndex, Snapshot
+from .tokenizer import Tokenizer, Utf8Tokenizer
+from .txt import AppendRecord, ContentStore
+
+
+class StaticIndex:
+    """Read-optimized on-disk annotative index."""
+
+    def __init__(self, directory: str, tokenizer: Optional[Tokenizer] = None,
+                 featurizer: Optional[Featurizer] = None, cache_size: int = 256):
+        self.directory = directory
+        self.tokenizer = tokenizer or Utf8Tokenizer()
+        self.featurizer = featurizer or JsonFeaturizer()
+        with open(os.path.join(directory, "meta.msgpack"), "rb") as fh:
+            self.meta = msgpack.unpackb(fh.read(), raw=False)
+        with open(os.path.join(directory, "features.msgpack"), "rb") as fh:
+            self._features: Dict[int, Tuple[int, int, int]] = {
+                int(k): tuple(v)
+                for k, v in msgpack.unpackb(fh.read(), raw=False,
+                                            strict_map_key=False).items()}
+        self._postings_path = os.path.join(directory, "postings.bin")
+        dctx = zstandard.ZstdDecompressor()
+        with open(os.path.join(directory, "content.bin"), "rb") as fh:
+            recs = msgpack.unpackb(dctx.decompress(fh.read()), raw=False)
+        self._content = ContentStore()
+        for a in recs:
+            off = np.frombuffer(a["off"], dtype=np.int64).reshape(-1, 2)
+            self._content.add(AppendRecord(a["lo"], a["hi"], a["text"], off,
+                                           tuple(a["tok"])))
+        self._cache: "OrderedDict[int, AnnotationList]" = OrderedDict()
+        self._cache_size = cache_size
+        self._lock = threading.Lock()
+        self._fh = open(self._postings_path, "rb")
+
+    # -- reads (same surface as Snapshot) ------------------------------- #
+    def annotations(self, feature) -> AnnotationList:
+        fval = (feature if isinstance(feature, int)
+                else self.featurizer.featurize(feature))
+        with self._lock:
+            if fval in self._cache:
+                self._cache.move_to_end(fval)
+                return self._cache[fval]
+        loc = self._features.get(fval)
+        if loc is None:
+            return AnnotationList.empty()
+        offset, nbytes, count = loc
+        with self._lock:
+            self._fh.seek(offset)
+            blob = self._fh.read(nbytes)
+        ns, ne = struct.unpack("<II", blob[:8])
+        s = vbyte.decode_gaps(blob[8:8 + ns], count)
+        e = vbyte.decode_gaps(blob[8 + ns:8 + ns + ne], count)
+        v = np.frombuffer(blob[8 + ns + ne:], dtype=np.float64)
+        lst = AnnotationList(s, e, v, _checked=True)
+        with self._lock:
+            self._cache[fval] = lst
+            while len(self._cache) > self._cache_size:
+                self._cache.popitem(last=False)
+        return lst
+
+    def hopper(self, feature) -> Term:
+        return Term(self.annotations(feature))
+
+    def translate(self, p: int, q: int) -> Optional[str]:
+        return self._content.translate(p, q)
+
+    def tokens(self, p: int, q: int) -> Optional[List[str]]:
+        return self._content.tokens(p, q)
+
+    # warren-compat helpers
+    def featurize(self, feature: str) -> int:
+        return self.featurizer.featurize(feature)
+
+    @property
+    def index(self):  # parity with Warren.phrase
+        return self
+
+    def phrase(self, text: str):
+        from .gcl import Phrase
+        from .annotation import AnnotationList as _AL
+        words = self.tokenizer.split(text)
+        terms = [self.hopper(w) for w in words]
+        if not terms:
+            return Term(_AL.empty())
+        return terms[0] if len(terms) == 1 else Phrase(terms)
+
+    def close(self) -> None:
+        self._fh.close()
+
+
+def write_static(snapshot_like, directory: str) -> None:
+    """Freeze a DynamicIndex snapshot (or anything exposing segments) into
+    the on-disk static layout."""
+    os.makedirs(directory + ".build", exist_ok=True)
+    build = directory + ".build"
+    # gather merged features
+    if isinstance(snapshot_like, Snapshot):
+        snap = snapshot_like
+    else:
+        snap = snapshot_like.snapshot()
+    feats: Dict[int, AnnotationList] = {}
+    fvals = set()
+    for seg in snap.segments:
+        fvals.update(seg.postings.keys())
+    for fval in fvals:
+        lst = snap.annotations(fval)
+        if len(lst):
+            feats[fval] = lst
+    offsets: Dict[int, Tuple[int, int, int]] = {}
+    with open(os.path.join(build, "postings.bin"), "wb") as fh:
+        pos = 0
+        for fval, lst in feats.items():
+            s = vbyte.encode_gaps(lst.starts)
+            e = vbyte.encode_gaps(lst.ends)
+            blob = struct.pack("<II", len(s), len(e)) + s + e + lst.values.tobytes()
+            fh.write(blob)
+            offsets[fval] = (pos, len(blob), len(lst))
+            pos += len(blob)
+    with open(os.path.join(build, "features.msgpack"), "wb") as fh:
+        fh.write(msgpack.packb({str(k): list(v) for k, v in offsets.items()}))
+    recs = []
+    for seg in snap.segments:
+        for r in seg.content.records():
+            recs.append({"lo": r.lo, "hi": r.hi, "text": r.text,
+                         "off": np.asarray(r.offsets, dtype=np.int64).tobytes(),
+                         "tok": list(r.tokens)})
+    recs.sort(key=lambda r: r["lo"])
+    cctx = zstandard.ZstdCompressor(level=6)
+    with open(os.path.join(build, "content.bin"), "wb") as fh:
+        fh.write(cctx.compress(msgpack.packb(recs)))
+    with open(os.path.join(build, "meta.msgpack"), "wb") as fh:
+        fh.write(msgpack.packb({"n_features": len(feats),
+                                "n_records": len(recs)}))
+    if os.path.exists(directory):
+        import shutil
+        shutil.rmtree(directory + ".old", ignore_errors=True)
+        os.rename(directory, directory + ".old")
+        os.rename(build, directory)
+        shutil.rmtree(directory + ".old", ignore_errors=True)
+    else:
+        os.rename(build, directory)

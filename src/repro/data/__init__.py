@@ -1,0 +1,3 @@
+from . import synth
+
+__all__ = ["synth"]

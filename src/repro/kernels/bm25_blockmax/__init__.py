@@ -1,0 +1,4 @@
+from .ops import bm25_blockmax_topk, pruned_fraction
+from .ref import bm25_topk_ref
+
+__all__ = ["bm25_blockmax_topk", "pruned_fraction", "bm25_topk_ref"]

@@ -1,0 +1,54 @@
+"""Block-Max BM25 Pallas TPU kernel (paper §2.2, Ding & Suel 2011 adapted).
+
+TPU adaptation of Block-Max WAND (DESIGN §2): the CPU algorithm moves one
+pivot pointer and skips compressed blocks; a TPU wants regular tiles.  The
+doc space is cut into BS-doc blocks; per-(term, block) maxima live in a tiny
+[T, NB] matrix.  A cheap pre-pass (ops.py) scores only the highest-UB blocks
+to establish a top-k threshold θ; the kernel then sweeps all blocks and
+*skips the scoring arithmetic* of any block whose upper bound Σ_t max_t is
+≤ θ (`@pl.when`), writing -inf instead.  On hardware the same predicate
+gates the HBM→VMEM DMA of the impact tile (manual async copy); functionally
+both paths produce identical results, which is what this kernel validates.
+
+The pruning is *conservative* (θ from a subset of true scores), so the
+final top-k equals the exhaustive oracle exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _blockmax_kernel(theta_ref, bmax_ref, impacts_ref, o_ref):
+    # theta [1,1]; bmax [T, 1] for this block; impacts [T, 1, BS]; out [1, BS]
+    ub = jnp.sum(bmax_ref[...])
+    theta = theta_ref[0, 0]
+
+    @pl.when(ub > theta)
+    def _():
+        o_ref[...] = jnp.sum(impacts_ref[...], axis=0)
+
+    @pl.when(ub <= theta)
+    def _():
+        o_ref[...] = jnp.full_like(o_ref, NEG_INF)
+
+
+def blockmax_scores_pallas(impacts, block_max, theta, *, interpret: bool = True):
+    """impacts [T, NB, BS], block_max [T, NB], theta scalar → scores [NB, BS]
+    with pruned blocks = -inf."""
+    t, nb, bs = impacts.shape
+    theta = jnp.asarray(theta, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _blockmax_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+            pl.BlockSpec((t, 1), lambda j: (0, j)),
+            pl.BlockSpec((t, 1, bs), lambda j: (0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, bs), jnp.float32),
+        interpret=interpret,
+    )(theta, block_max, impacts)

@@ -1,0 +1,4 @@
+from .ops import embedding_bag_padded, pad_ragged
+from .ref import embedding_bag_ref
+
+__all__ = ["embedding_bag_padded", "pad_ragged", "embedding_bag_ref"]

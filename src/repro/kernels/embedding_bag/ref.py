@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: EmbeddingBag = gather + segment-sum (JAX has no native)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, indices, segment_ids, n_bags: int,
+                      weights=None, combiner: str = "sum"):
+    """table [V, D]; indices [N]; segment_ids [N] → [n_bags, D]."""
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(indices, table.dtype),
+                                  segment_ids, num_segments=n_bags)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for GQA decode attention (one new token vs KV cache)."""
+
+import jax.numpy as jnp
+
+
+def gqa_decode_ref(q, k, v, length=None):
+    """q [B, Hkv, G, D]; k/v [B, S, Hkv, D]; length [B] valid KV prefix.
+
+    Returns [B, Hkv, G, D].
+    """
+    b, hkv, g, d = q.shape
+    s = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(q.dtype)
+    # scores [B, Hkv, G, S]
+    scores = jnp.einsum("bhgd,bshd->bhgs", q, k) * scale
+    if length is not None:
+        pos = jnp.arange(s)[None, None, None, :]
+        mask = pos < length[:, None, None, None]
+        scores = jnp.where(mask, scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhgs,bshd->bhgd", p, v)

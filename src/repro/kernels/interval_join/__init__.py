@@ -1,0 +1,4 @@
+from .ops import interval_join
+from .ref import contained_in_mask_ref, containing_mask_ref
+
+__all__ = ["interval_join", "contained_in_mask_ref", "containing_mask_ref"]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the containment-join kernel."""
+
+import jax.numpy as jnp
+
+from repro.core.vectorized import PAD
+
+
+def contained_in_mask_ref(a_s, a_e, b_s, b_e):
+    """mask[i] = A[i] ⊑ some B[j], via batched searchsorted (O(n log m))."""
+    j = jnp.searchsorted(b_e, a_e, side="left")
+    j = jnp.minimum(j, b_e.shape[0] - 1)
+    ok = (b_e[j] >= a_e) & (b_s[j] <= a_s) & (b_s[j] != PAD)
+    return (ok & (a_s != PAD)).astype(jnp.int32)
+
+
+def containing_mask_ref(a_s, a_e, b_s, b_e):
+    """mask[i] = A[i] ⊒ some B[j]."""
+    j = jnp.searchsorted(b_s, a_s, side="left")
+    j = jnp.minimum(j, b_s.shape[0] - 1)
+    ok = (b_s[j] >= a_s) & (b_e[j] <= a_e) & (b_s[j] != PAD)
+    return (ok & (a_s != PAD)).astype(jnp.int32)

@@ -1,0 +1,274 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this lowers the *real* step function (train_step including the
+AdamW update, or the serving step) against ShapeDtypeStruct inputs on the
+production mesh, compiles it, and records:
+
+  * memory_analysis()  — per-device bytes (proves the cell fits),
+  * cost_analysis()    — per-device HLO FLOPs / bytes for §Roofline,
+  * collective bytes   — parsed from the post-SPMD HLO text, summed per
+    collective kind (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute),
+
+and appends the record to experiments/dryrun_<mesh>.jsonl.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--multi-pod] [--arch A]
+      [--shape S] [--out FILE] [--fsdp {auto,on,off}]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_arch
+from repro.configs.gnn_family import cfg_for_cell
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.train.optimizer import AdamWConfig, init_opt_state, make_train_step
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s64": 8,
+                "u64": 8, "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s16": 2,
+                "u16": 2, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|f64|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum result-shape bytes of collective ops in post-SPMD HLO."""
+    out = {k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # result side only: "%name = <shape(s)> <op>(" — find which op
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*?)\s+(all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)", line)
+        if not m:
+            continue
+        shapes_str, op = m.group(1), m.group(2)
+        nbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(shapes_str):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op]["count"] += 1
+        out[op]["bytes"] += nbytes
+    return {k: v for k, v in out.items() if v["count"]}
+
+
+def _first(d):
+    return d[0] if isinstance(d, (list, tuple)) else d
+
+
+def memory_record(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+        ma = _first(ma)
+        return {
+            "argument_bytes": float(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": float(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": float(getattr(ma, "temp_size_in_bytes", 0)),
+            "alias_bytes": float(getattr(ma, "alias_size_in_bytes", 0)),
+            "peak_bytes": float(
+                getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                + getattr(ma, "temp_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0)),
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def cost_record(compiled) -> Dict[str, float]:
+    try:
+        ca = _first(compiled.cost_analysis())
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and np.isfinite(v)}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+# --------------------------------------------------------------------- #
+def _first_dim_sharding(mesh: Mesh, leaf, preferred) -> NamedSharding:
+    """Shard dim0 over the longest prefix of `preferred` it divides by."""
+    dim0 = leaf.shape[0] if leaf.ndim else 1
+    axes = tuple(preferred)
+    while axes and dim0 % int(np.prod([mesh.shape[a] for a in axes])) != 0:
+        axes = axes[:-1]
+    spec = [axes if axes else None] + [None] * (leaf.ndim - 1)
+    return NamedSharding(mesh, P(*spec))
+
+
+def build_cell(arch_name: str, shape_name: str, mesh: Mesh,
+               fsdp_mode: str = "auto", unroll: int = 1):
+    """Returns (fn, arg_specs, in_shardings, out_shardings, meta)."""
+    spec = get_arch(arch_name)
+    cfg = spec.config
+    if unroll != 1 and hasattr(cfg, "scan_unroll"):
+        cfg = dataclasses.replace(cfg, scan_unroll=unroll)
+    cell = spec.cells(cfg)[shape_name]
+    dp = shd.data_axes(mesh)
+
+    if spec.family == "lm":
+        fsdp = (cfg.moe is not None) if fsdp_mode == "auto" else (fsdp_mode == "on")
+        aparams = spec.abstract_params()
+        p_sh = shd.lm_param_sharding(mesh, aparams, fsdp=fsdp)
+        if cell.kind == "train":
+            aopt = jax.eval_shape(init_opt_state, aparams)
+            o_sh = shd.opt_state_sharding(p_sh)
+            b_sh = {k: _first_dim_sharding(mesh, v, dp)
+                    for k, v in cell.batch_specs.items()}
+            step = make_train_step(lambda p, b: T.loss_fn(p, b, cfg))
+            return (step, (aparams, aopt, cell.batch_specs),
+                    (p_sh, o_sh, b_sh), (p_sh, o_sh, None),
+                    {"fsdp": fsdp})
+        if cell.note == "prefill":
+            b = cell.batch_specs["tokens"]
+            tok_sh = _first_dim_sharding(mesh, b, dp)
+            fn = lambda p, t: T.prefill(p, t, cfg)
+            return fn, (aparams, b), (p_sh, tok_sh), None, {"fsdp": fsdp}
+        # decode
+        batch = cell.batch_specs["tokens"].shape[0]
+        seq = int(cell.note.split("=")[1])
+        cache_spec = spec.cache_spec(cfg, batch, seq)
+        long_ctx = batch == 1
+        c_sh = shd.lm_cache_sharding(mesh, batch, long_context=long_ctx)
+        tok_sh = (NamedSharding(mesh, P()) if long_ctx
+                  else _first_dim_sharding(mesh, cell.batch_specs["tokens"], dp))
+        fn = lambda p, c, t: T.decode_step(p, c, t, cfg)
+        return (fn, (aparams, cache_spec, cell.batch_specs["tokens"]),
+                (p_sh, c_sh, tok_sh), (None, c_sh), {"fsdp": fsdp})
+
+    if spec.family == "gnn":
+        ccfg = cfg_for_cell(cfg, shape_name)
+        aparams = jax.eval_shape(lambda k: spec.init_fn(ccfg, k),
+                                 jax.random.PRNGKey(0))
+        p_sh = shd.gnn_param_sharding(mesh, aparams)
+        all_axes = tuple(mesh.axis_names)
+        b_sh = {k: _first_dim_sharding(mesh, v, all_axes)
+                for k, v in cell.batch_specs.items()}
+        aopt = jax.eval_shape(init_opt_state, aparams)
+        o_sh = shd.opt_state_sharding(p_sh)
+        step = make_train_step(lambda p, b: spec.loss_fn(p, ccfg, b))
+        return (step, (aparams, aopt, cell.batch_specs),
+                (p_sh, o_sh, b_sh), (p_sh, o_sh, None), {"cfg": ccfg.name})
+
+    # recsys
+    aparams = spec.abstract_params()
+    p_sh = shd.recsys_param_sharding(mesh, aparams)
+    rs = shd.recsys_batch_sharding(mesh)
+    b_sh = {}
+    for k, v in cell.batch_specs.items():
+        if k == "cand_ids":
+            b_sh[k] = NamedSharding(mesh, P("model"))
+        else:
+            b_sh[k] = _first_dim_sharding(mesh, v, dp)
+    if cell.kind == "train":
+        aopt = jax.eval_shape(init_opt_state, aparams)
+        o_sh = shd.opt_state_sharding(p_sh)
+        step = make_train_step(lambda p, b: spec.loss_fn(p, cfg, b))
+        return (step, (aparams, aopt, cell.batch_specs),
+                (p_sh, o_sh, b_sh), (p_sh, o_sh, None), {})
+    fn = lambda p, b: spec.serve_fn(p, cfg, b)
+    return fn, (aparams, cell.batch_specs), (p_sh, b_sh), None, {}
+
+
+def run_cell(arch_name: str, shape_name: str, mesh: Mesh, mesh_name: str,
+             fsdp_mode: str = "auto", unroll: int = 1) -> Dict[str, Any]:
+    t0 = time.time()
+    rec: Dict[str, Any] = {"arch": arch_name, "shape": shape_name,
+                           "mesh": mesh_name, "unroll": unroll,
+                           "n_devices": int(np.prod(list(mesh.shape.values())))}
+    try:
+        fn, args, in_sh, out_sh, meta = build_cell(arch_name, shape_name,
+                                                   mesh, fsdp_mode, unroll)
+        rec.update(meta if isinstance(meta, dict) else {})
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        rec["memory"] = memory_record(compiled)
+        rec["cost"] = cost_record(compiled)
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_stats(hlo)
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+        rec["ok"] = True
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--unroll", type=int, default=1,
+                    help="scan unroll for the two-point cost probe")
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    out_path = args.out or f"experiments/dryrun_{mesh_name}.jsonl"
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+
+    cells = []
+    for name, spec in ARCHS.items():
+        if args.arch and name != args.arch:
+            continue
+        for shape_name in spec.cells(spec.config):
+            if args.shape and shape_name != args.shape:
+                continue
+            cells.append((name, shape_name))
+
+    n_ok = 0
+    with open(out_path, "a") as fh:
+        for arch_name, shape_name in cells:
+            rec = run_cell(arch_name, shape_name, mesh, mesh_name, args.fsdp,
+                           args.unroll)
+            line = {k: v for k, v in rec.items() if k != "traceback"}
+            fh.write(json.dumps(line) + "\n")
+            fh.flush()
+            status = "OK " if rec["ok"] else "FAIL"
+            mem = rec.get("memory", {}).get("peak_bytes", 0) / 2**30
+            fl = rec.get("cost", {}).get("flops", 0)
+            print(f"[{status}] {arch_name:24s} {shape_name:16s} "
+                  f"mem/dev={mem:7.2f}GiB flops/dev={fl:.3e} "
+                  f"({rec['total_s']}s)", flush=True)
+            if not rec["ok"]:
+                print(rec["error"], flush=True)
+            else:
+                n_ok += 1
+    print(f"\n{n_ok}/{len(cells)} cells compiled on {mesh_name}", flush=True)
+    return 0 if n_ok == len(cells) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

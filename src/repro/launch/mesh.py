@@ -1,0 +1,22 @@
+"""Production meshes.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (tests / CPU smoke runs)."""
+    n = len(jax.devices())
+    mp = min(model_parallel, n)
+    return jax.make_mesh((n // mp, mp), ("data", "model"))

@@ -1,0 +1,59 @@
+"""Training launcher: --arch <id> on the local mesh (smoke scale on CPU;
+the full configs are exercised through launch/dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch sasrec --steps 20
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def batch_stream(spec, cfg):
+    seed = 0
+    while True:
+        b = spec.smoke_batch(cfg, "train", seed=seed)
+        yield {k: jnp.asarray(v) if not np.isscalar(v) else v
+               for k, v in b.items()}
+        seed += 1
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args(argv)
+
+    spec = get_arch(args.arch)
+    cfg = spec.smoke_config
+    params = spec.init_fn(cfg, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{args.arch} (smoke config): {n_params / 1e6:.2f}M params")
+
+    tc = TrainerConfig(total_steps=args.steps,
+                       ckpt_every=max(args.steps // 2, 1),
+                       ckpt_dir=args.ckpt_dir,
+                       log_every=max(args.steps // 5, 1),
+                       opt=AdamWConfig(lr=1e-3, warmup_steps=5,
+                                       total_steps=args.steps))
+    trainer = Trainer(lambda p, b: spec.loss_fn(p, cfg, b), params, tc,
+                      batch_stream(spec, cfg))
+    t0 = time.time()
+    out = trainer.train()
+    dt = time.time() - t0
+    for m in out["metrics"]:
+        print(f"  step {m['step']:5d}  loss {m['loss']:.4f}  "
+              f"|g| {m['grad_norm']:.3f}")
+    print(f"{out['step']} steps in {dt:.1f}s ({out['step'] / dt:.2f} steps/s)")
+
+
+if __name__ == "__main__":
+    main()

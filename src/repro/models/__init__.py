@@ -1,0 +1,3 @@
+from . import layers, nequip, recsys, transformer
+
+__all__ = ["layers", "nequip", "recsys", "transformer"]

@@ -1,0 +1,153 @@
+"""Shared model layers: RMSNorm, RoPE, GQA attention, SwiGLU — raw JAX.
+
+Parameters are plain pytrees (dicts of jnp arrays); init functions are pure
+so `jax.eval_shape(init, ...)` gives allocation-free abstract params for the
+multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, max_len: int, theta: float = 10_000.0):
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    t = np.arange(max_len)
+    freqs = np.outer(t, inv)                       # [S, D/2]
+    return jnp.asarray(np.cos(freqs), jnp.float32), jnp.asarray(np.sin(freqs), jnp.float32)
+
+
+def apply_rope(x, cos, sin, positions=None):
+    """x [..., S, H, D]; cos/sin [max_len, D/2]; positions [..., S] optional."""
+    if positions is None:
+        s = x.shape[-3]
+        c = cos[:s][:, None, :]
+        sn = sin[:s][:, None, :]
+    else:
+        c = cos[positions][..., None, :]
+        sn = sin[positions][..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * sn, x1 * sn + x2 * c], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def causal_gqa_attention(q, k, v, *, qk_norm_scale=None):
+    """Training-shape attention.
+
+    q [B, S, Hkv, G, Dh]; k/v [B, S, Hkv, Dh] → [B, S, Hkv, G, Dh].
+    Grouped heads share KV without materializing repeats.
+    """
+    b, s, hkv, g, dh = q.shape
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunked_causal_gqa_attention(q, k, v, *, q_chunk: int, kv_chunk: int):
+    """Flash-style blocked causal attention in pure jnp (beyond-paper perf
+    path for long prefill): scores never materialize beyond
+    [B, Hkv, G, q_chunk, kv_chunk]; online-softmax running (m, l, acc) over
+    KV chunks, scanned over query chunks.  Cuts the memory roofline term of
+    prefill_32k by ~S/q_chunk and removes the giant activation reshards.
+
+    q [B, S, Hkv, G, Dh]; k/v [B, S, Hkv, Dh] → [B, S, Hkv, G, Dh].
+    """
+    b, s, hkv, g, dh = q.shape
+    nq = s // q_chunk
+    nk = s // kv_chunk
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qc = q.reshape(b, nq, q_chunk, hkv, g, dh)
+    kc = k.reshape(b, nk, kv_chunk, hkv, dh)
+    vc = v.reshape(b, nk, kv_chunk, hkv, dh)
+
+    def q_block(qi, q_tile):
+        # q_tile [B, q_chunk, Hkv, G, Dh]
+        m0 = jnp.full((b, hkv, g, q_chunk, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, dh), jnp.float32)
+
+        def kv_block(carry, kj):
+            m, l, acc = carry
+            k_tile = kc[:, kj]
+            v_tile = vc[:, kj]
+            sco = jnp.einsum("bqhgd,bkhd->bhgqk", q_tile.astype(jnp.float32),
+                             k_tile.astype(jnp.float32)) * scale
+            qpos = qi * q_chunk + jnp.arange(q_chunk)
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            sco = jnp.where(mask[None, None, None], sco, -1e30)
+            m_new = jnp.maximum(m, sco.max(axis=-1, keepdims=True))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sco - m_new)
+            l = l * alpha + p.sum(axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                                           v_tile.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)  # [B, q_chunk, Hkv, G, Dh]
+
+    def scan_q(_, qi):
+        return None, q_block(qi, qc[:, qi])
+
+    _, blocks = jax.lax.scan(scan_q, None, jnp.arange(nq))
+    # blocks [nq, B, q_chunk, Hkv, G, Dh] → [B, S, Hkv, G, Dh]
+    return blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, hkv, g, dh
+                                                      ).astype(q.dtype)
+
+
+def decode_gqa_attention(q, k_cache, v_cache, length):
+    """Decode-shape attention (one new token vs cache), pure-jnp flash-
+    decoding analogue: safe to shard the S axis (partial-softmax combine
+    is an einsum + max/sum reductions that GSPMD reduces over shards).
+
+    q [B, Hkv, G, Dh]; caches [B, S, Hkv, Dh]; length [B] → [B, Hkv, G, Dh].
+    """
+    b, hkv, g, dh = q.shape
+    s = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)[None, None, None, :]
+    scores = jnp.where(pos < length[:, None, None, None], scores, -1e30)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    out = out / p.sum(axis=-1)[..., None]
+    return out.astype(q.dtype)
+
+
+def cross_entropy_loss(logits, labels, ignore_id: int = -1):
+    """Mean token cross entropy in f32; labels == ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = labels != ignore_id
+    labels_safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,360 @@
+"""Recsys architectures: DLRM-RM2, xDeepFM (CIN), two-tower, SASRec.
+
+The shared substrate is the embedding lookup (JAX has no EmbeddingBag —
+built here from take + segment-sum / einsum, with the fused Pallas kernel as
+the opt-in fast path).  Tables are row-sharded over the 'model' mesh axis;
+interactions and MLPs are small and replicated (DESIGN §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dense(key, shape, dtype, scale=None):
+    scale = scale or 1.0 / np.sqrt(max(shape[0], 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _mlp_init(key, dims: Sequence[int], dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": _dense(ks[i], (dims[i], dims[i + 1]), dtype),
+             "b": jnp.zeros((dims[i + 1],), dtype)} for i in range(len(dims) - 1)]
+
+
+def _mlp_apply(layers, x, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def bce_with_logits(logits, labels):
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# ===================================================================== #
+# DLRM (arXiv:1906.00091), RM2 scale
+# ===================================================================== #
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab_per_table: int = 1_000_000
+    bot_mlp: Tuple[int, ...] = (13, 512, 256, 64)
+    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    dtype: str = "float32"
+
+    @property
+    def jnp_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+
+def dlrm_init(cfg: DLRMConfig, key):
+    ks = jax.random.split(key, 4)
+    dt = cfg.jnp_dtype
+    n_feat = cfg.n_sparse + 1
+    n_pairs = n_feat * (n_feat - 1) // 2
+    top_in = cfg.embed_dim + n_pairs
+    return {
+        # one stacked table tensor → a single row-sharded array
+        "tables": _dense(ks[0], (cfg.n_sparse, cfg.vocab_per_table,
+                                 cfg.embed_dim), dt, scale=0.01),
+        "bot": _mlp_init(ks[1], cfg.bot_mlp, dt),
+        "top": _mlp_init(ks[2], (top_in,) + cfg.top_mlp[1:], dt),
+    }
+
+
+def _field_lookup(tables, sparse_ids):
+    """tables [F, V, D]; ids [B, F] → [B, F, D] (vmap over fields)."""
+    return jax.vmap(lambda t, i: jnp.take(t, i, axis=0),
+                    in_axes=(0, 1), out_axes=1)(tables, sparse_ids)
+
+
+def dlrm_forward(params, cfg: DLRMConfig, dense, sparse_ids):
+    """dense [B, 13] f32; sparse_ids [B, 26] int32 → logits [B]."""
+    b = dense.shape[0]
+    d = _mlp_apply(params["bot"], dense.astype(cfg.jnp_dtype), final_act=True)
+    emb = _field_lookup(params["tables"], sparse_ids)  # [B, F, D]
+    feats = jnp.concatenate([d[:, None, :], emb], axis=1)   # [B, F+1, D]
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    iu, ju = jnp.triu_indices(feats.shape[1], k=1)
+    pairs = inter[:, iu, ju]                          # [B, n_pairs]
+    z = jnp.concatenate([d, pairs.astype(d.dtype)], axis=1)
+    return _mlp_apply(params["top"], z)[:, 0]
+
+
+def dlrm_loss(params, cfg: DLRMConfig, batch):
+    logits = dlrm_forward(params, cfg, batch["dense"], batch["sparse"])
+    return bce_with_logits(logits, batch["labels"])
+
+
+# ===================================================================== #
+# xDeepFM (arXiv:1803.05170)
+# ===================================================================== #
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    vocab_per_table: int = 100_000
+    cin_layers: Tuple[int, ...] = (200, 200, 200)
+    mlp: Tuple[int, ...] = (400, 400)
+    dtype: str = "float32"
+
+    @property
+    def jnp_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+
+def xdeepfm_init(cfg: XDeepFMConfig, key):
+    ks = jax.random.split(key, 6)
+    dt = cfg.jnp_dtype
+    m = cfg.n_sparse
+    cin = []
+    h_prev = m
+    for i, h in enumerate(cfg.cin_layers):
+        cin.append(_dense(jax.random.fold_in(ks[1], i), (h, h_prev * m), dt))
+        h_prev = h
+    mlp_dims = (m * cfg.embed_dim,) + cfg.mlp + (1,)
+    return {
+        "tables": _dense(ks[0], (m, cfg.vocab_per_table, cfg.embed_dim), dt,
+                         scale=0.01),
+        "cin": cin,
+        "cin_out": _dense(ks[2], (sum(cfg.cin_layers), 1), dt),
+        "mlp": _mlp_init(ks[3], mlp_dims, dt),
+        "linear": _dense(ks[4], (m, cfg.vocab_per_table, 1), dt, scale=0.01),
+    }
+
+
+def xdeepfm_forward(params, cfg: XDeepFMConfig, sparse_ids):
+    """sparse_ids [B, F] → logits [B]."""
+    b, m = sparse_ids.shape
+    emb = _field_lookup(params["tables"], sparse_ids)  # [B, F, D]
+    x0 = emb
+    xs: List[jnp.ndarray] = []
+    xk = x0
+    for w in params["cin"]:
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)       # [B, Hk-1, F, D]
+        z = z.reshape(b, -1, cfg.embed_dim)           # [B, Hk-1*F, D]
+        xk = jnp.einsum("hz,bzd->bhd", w, z)          # [B, Hk, D]
+        xs.append(xk.sum(axis=-1))                    # sum-pool over D
+    cin_feat = jnp.concatenate(xs, axis=-1)           # [B, ΣH]
+    y_cin = (cin_feat @ params["cin_out"])[:, 0]
+    y_dnn = _mlp_apply(params["mlp"], emb.reshape(b, -1))[:, 0]
+    lin = _field_lookup(params["linear"], sparse_ids)  # [B, F, 1]
+    y_lin = lin.sum(axis=(1, 2))
+    return y_cin + y_dnn + y_lin
+
+
+def xdeepfm_loss(params, cfg: XDeepFMConfig, batch):
+    logits = xdeepfm_forward(params, cfg, batch["sparse"])
+    return bce_with_logits(logits, batch["labels"])
+
+
+# ===================================================================== #
+# Two-tower retrieval (Yi et al., RecSys'19)
+# ===================================================================== #
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    embed_dim: int = 256
+    tower_mlp: Tuple[int, ...] = (1024, 512, 256)
+    n_users: int = 2_000_000
+    n_items: int = 1_000_000
+    n_user_feats: int = 8        # multi-hot user history features per example
+    loss_chunk: int = 0          # streamed in-batch softmax chunk (0 = off)
+    dtype: str = "float32"
+
+    @property
+    def jnp_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+
+def twotower_init(cfg: TwoTowerConfig, key):
+    ks = jax.random.split(key, 4)
+    dt = cfg.jnp_dtype
+    d = cfg.embed_dim
+    return {
+        "user_table": _dense(ks[0], (cfg.n_users, d), dt, scale=0.01),
+        "item_table": _dense(ks[1], (cfg.n_items, d), dt, scale=0.01),
+        "user_tower": _mlp_init(ks[2], (d,) + cfg.tower_mlp, dt),
+        "item_tower": _mlp_init(ks[3], (d,) + cfg.tower_mlp, dt),
+    }
+
+
+def _embed_bag(table, ids, weights):
+    """EmbeddingBag built from take + einsum (no native op in JAX)."""
+    rows = jnp.take(table, ids, axis=0)               # [B, L, D]
+    return jnp.einsum("bld,bl->bd", rows, weights.astype(table.dtype))
+
+
+def twotower_user_embed(params, cfg, user_ids, hist_ids, hist_w):
+    u = jnp.take(params["user_table"], user_ids, axis=0)
+    u = u + _embed_bag(params["item_table"], hist_ids, hist_w)
+    u = _mlp_apply(params["user_tower"], u, final_act=False)
+    return u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+
+
+def twotower_item_embed(params, cfg, item_ids):
+    i = jnp.take(params["item_table"], item_ids, axis=0)
+    i = _mlp_apply(params["item_tower"], i, final_act=False)
+    return i / jnp.maximum(jnp.linalg.norm(i, axis=-1, keepdims=True), 1e-6)
+
+
+def twotower_loss(params, cfg: TwoTowerConfig, batch):
+    """In-batch sampled softmax with logQ correction.
+
+    With ``loss_chunk`` set, the [B, B] logits matrix is never materialized:
+    the log-normalizer streams over item chunks with a running
+    max/accumulator (§Perf iteration 3) — O(B · chunk) memory instead of
+    O(B²), same result to fp rounding."""
+    u = twotower_user_embed(params, cfg, batch["user_ids"],
+                            batch["hist_ids"], batch["hist_w"])
+    i = twotower_item_embed(params, cfg, batch["item_ids"])
+    logq = batch.get("logq")
+    b = u.shape[0]
+    gold = (jnp.sum(u * i, axis=-1).astype(jnp.float32) * 20.0
+            - (logq if logq is not None else 0.0))
+    if not cfg.loss_chunk or b <= cfg.loss_chunk:
+        logits = (u @ i.T).astype(jnp.float32) * 20.0       # temperature
+        if logq is not None:
+            logits = logits - logq[None, :]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        return jnp.mean(logz - gold)
+    c = cfg.loss_chunk
+    nc = b // c
+    ic = i.reshape(nc, c, -1)
+    lqc = (logq.reshape(nc, c) if logq is not None
+           else jnp.zeros((nc, c), jnp.float32))
+
+    def chunk(carry, xs):
+        m, s = carry
+        i_tile, lq_tile = xs
+        lg = (u @ i_tile.T).astype(jnp.float32) * 20.0 - lq_tile[None, :]
+        m_new = jnp.maximum(m, lg.max(axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(lg - m_new[:, None]).sum(-1)
+        return (m_new, s), None
+
+    (m, s), _ = jax.lax.scan(
+        chunk, (jnp.full((b,), -1e30, jnp.float32), jnp.zeros((b,))),
+        (ic, lqc))
+    logz = m + jnp.log(jnp.maximum(s, 1e-30))
+    return jnp.mean(logz - gold)
+
+
+def twotower_score_candidates(params, cfg: TwoTowerConfig, batch):
+    """retrieval_cand: one query vs n_candidates (sharded matmul)."""
+    u = twotower_user_embed(params, cfg, batch["user_ids"],
+                            batch["hist_ids"], batch["hist_w"])
+    i = twotower_item_embed(params, cfg, batch["cand_ids"])
+    return (u @ i.T).astype(jnp.float32)                # [B, n_cand]
+
+
+# ===================================================================== #
+# SASRec (arXiv:1808.09781)
+# ===================================================================== #
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    n_items: int = 1_000_000
+    dropout: float = 0.0         # deterministic runs
+    dtype: str = "float32"
+    scan_unroll: int = 1
+
+    @property
+    def jnp_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+
+def sasrec_init(cfg: SASRecConfig, key):
+    dt = cfg.jnp_dtype
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 2 + 6 * cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        bk = ks[2 + i * 6: 8 + i * 6]
+        blocks.append({
+            "wq": _dense(bk[0], (d, d), dt), "wk": _dense(bk[1], (d, d), dt),
+            "wv": _dense(bk[2], (d, d), dt), "wo": _dense(bk[3], (d, d), dt),
+            "ln1": jnp.ones((d,), dt), "ln2": jnp.ones((d,), dt),
+            "ff1": _dense(bk[4], (d, d), dt), "ff2": _dense(bk[5], (d, d), dt),
+        })
+    blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return {
+        "item_embed": _dense(ks[0], (cfg.n_items, d), dt, scale=0.01),
+        "pos_embed": _dense(ks[1], (cfg.seq_len, d), dt, scale=0.01),
+        "blocks": blocks,
+    }
+
+
+def _ln(x, g, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g
+
+
+def sasrec_encode(params, cfg: SASRecConfig, item_seq):
+    """item_seq [B, S] (0 = padding) → hidden [B, S, D]."""
+    b, s = item_seq.shape
+    x = jnp.take(params["item_embed"], item_seq, axis=0)
+    x = x + params["pos_embed"][None, :s]
+    mask = (item_seq != 0)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+
+    def block(x, bp):
+        xn = _ln(x, bp["ln1"])
+        q = xn @ bp["wq"]
+        k = xn @ bp["wk"]
+        v = xn @ bp["wv"]
+        scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                            k.astype(jnp.float32)) / np.sqrt(cfg.embed_dim)
+        scores = jnp.where(causal[None] & mask[:, None, :], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        x = x + (jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+                 .astype(x.dtype) @ bp["wo"])
+        xn = _ln(x, bp["ln2"])
+        x = x + jax.nn.relu(xn @ bp["ff1"]) @ bp["ff2"]
+        return x, None
+
+    x, _ = jax.lax.scan(block, x, params["blocks"],
+                        unroll=min(cfg.scan_unroll, cfg.n_blocks))
+    return x * mask[..., None]
+
+
+def sasrec_loss(params, cfg: SASRecConfig, batch):
+    """Next-item BCE with sampled negatives (paper's training objective)."""
+    h = sasrec_encode(params, cfg, batch["item_seq"])        # [B, S, D]
+    pos = jnp.take(params["item_embed"], batch["pos_items"], axis=0)
+    neg = jnp.take(params["item_embed"], batch["neg_items"], axis=0)
+    pos_logit = jnp.einsum("bsd,bsd->bs", h, pos).astype(jnp.float32)
+    neg_logit = jnp.einsum("bsd,bsd->bs", h, neg).astype(jnp.float32)
+    mask = (batch["pos_items"] != 0).astype(jnp.float32)
+    loss = (jnp.log1p(jnp.exp(-pos_logit)) + jnp.log1p(jnp.exp(neg_logit)))
+    return (loss * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def sasrec_score_candidates(params, cfg: SASRecConfig, batch):
+    """Score candidate items against the last hidden state."""
+    h = sasrec_encode(params, cfg, batch["item_seq"])        # [B, S, D]
+    lengths = (batch["item_seq"] != 0).sum(-1)
+    last = h[jnp.arange(h.shape[0]), jnp.maximum(lengths - 1, 0)]  # [B, D]
+    cand = jnp.take(params["item_embed"], batch["cand_ids"], axis=0)
+    if cand.ndim == 2:                                       # shared cands
+        return (last @ cand.T).astype(jnp.float32)
+    return jnp.einsum("bd,bcd->bc", last, cand).astype(jnp.float32)

@@ -1,0 +1,351 @@
+"""GQA transformer LM (dense + MoE) with scan-over-layers, raw JAX.
+
+Covers qwen2.5 / yi / internlm2 (dense GQA, optional QKV bias) and
+qwen3-moe / qwen2-moe (top-k routed experts, optional shared expert,
+optional QK-norm) from a single config.
+
+Layer parameters are stacked along a leading [L] axis and the decoder body
+is a `jax.lax.scan`, keeping compile time flat in depth (94-layer MoE lowers
+as one layer) — essential for the 80-compile dry-run matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import (apply_rope, causal_gqa_attention,
+                     chunked_causal_gqa_attention, cross_entropy_loss,
+                     decode_gqa_attention, rms_norm, rope_frequencies, swiglu)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert_ff: int
+    n_shared: int = 0           # shared experts (qwen2-moe style)
+    d_shared_ff: int = 0
+    capacity_factor: float = 1.25
+    router_norm_topk: bool = True   # normalize top-k probabilities
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    max_seq_len: int = 32_768
+    moe: Optional[MoEConfig] = None
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_unroll: int = 1      # full unroll (=n_layers) for exact cost_analysis
+    # beyond-paper perf knobs (EXPERIMENTS.md §Perf): 0 = off (baseline)
+    attn_chunk_q: int = 0     # flash-style blocked attention chunk sizes
+    attn_chunk_kv: int = 0
+    moe_shard: str = ""       # "" | "all" | "combine": wsc inside moe_block
+
+    @property
+    def group_size(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def jnp_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def param_count(self) -> int:
+        """Total (and active) parameter counts for roofline MODEL_FLOPS."""
+        d, hd = self.d_model, self.head_dim
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        if self.moe is None:
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = (self.moe.n_experts * 3 * d * self.moe.d_expert_ff
+                   + d * self.moe.n_experts
+                   + (3 * d * self.moe.d_shared_ff if self.moe.n_shared else 0))
+        emb = self.vocab * d * 2
+        return self.n_layers * (attn + mlp + 2 * d) + emb + d
+
+    def active_param_count(self) -> int:
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        hd = self.head_dim
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        mlp = (self.moe.top_k * 3 * d * self.moe.d_expert_ff
+               + d * self.moe.n_experts
+               + (3 * d * self.moe.d_shared_ff if self.moe.n_shared else 0))
+        emb = self.vocab * d * 2
+        return self.n_layers * (attn + mlp + 2 * d) + emb + d
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(cfg: TransformerConfig, key):
+    dt = cfg.jnp_dtype
+    d, hd = cfg.d_model, cfg.head_dim
+    h, hkv, L = cfg.n_heads, cfg.n_kv_heads, cfg.n_layers
+    keys = jax.random.split(key, 16)
+
+    def stacked(k, shape, scale=None):
+        return _dense_init(k, (L,) + shape, dt, scale)
+
+    layer = {
+        "attn_norm": jnp.ones((L, d), dt),
+        "mlp_norm": jnp.ones((L, d), dt),
+        "wq": stacked(keys[0], (d, h * hd)),
+        "wk": stacked(keys[1], (d, hkv * hd)),
+        "wv": stacked(keys[2], (d, hkv * hd)),
+        "wo": stacked(keys[3], (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        layer["bq"] = jnp.zeros((L, h * hd), dt)
+        layer["bk"] = jnp.zeros((L, hkv * hd), dt)
+        layer["bv"] = jnp.zeros((L, hkv * hd), dt)
+    if cfg.qk_norm:
+        layer["q_norm"] = jnp.ones((L, hd), dt)
+        layer["k_norm"] = jnp.ones((L, hd), dt)
+    if cfg.moe is None:
+        layer["w_gate"] = stacked(keys[4], (d, cfg.d_ff))
+        layer["w_up"] = stacked(keys[5], (d, cfg.d_ff))
+        layer["w_down"] = stacked(keys[6], (cfg.d_ff, d))
+    else:
+        m = cfg.moe
+        layer["router"] = stacked(keys[7], (d, m.n_experts))
+        layer["e_gate"] = stacked(keys[8], (m.n_experts, d, m.d_expert_ff))
+        layer["e_up"] = stacked(keys[9], (m.n_experts, d, m.d_expert_ff))
+        layer["e_down"] = stacked(keys[10], (m.n_experts, m.d_expert_ff, d))
+        if m.n_shared:
+            layer["s_gate"] = stacked(keys[11], (d, m.d_shared_ff))
+            layer["s_up"] = stacked(keys[12], (d, m.d_shared_ff))
+            layer["s_down"] = stacked(keys[13], (m.d_shared_ff, d))
+            layer["s_gate_proj"] = stacked(keys[14], (d, 1))
+    return {
+        "embed": _dense_init(keys[15], (cfg.vocab, d), dt, scale=0.02),
+        "layers": layer,
+        "final_norm": jnp.ones((d,), dt),
+        "lm_head": _dense_init(keys[15], (d, cfg.vocab), dt),
+    }
+
+
+# --------------------------------------------------------------------- #
+# MoE dispatch (gather formulation; DESIGN §7)
+# --------------------------------------------------------------------- #
+def moe_block(x, lp, cfg: TransformerConfig):
+    """x [T, D] (token-major) → [T, D]."""
+    m = cfg.moe
+    T, D = x.shape
+    E, K = m.n_experts, m.top_k
+    C = max(int(np.ceil(T * K / E * m.capacity_factor)), 1)
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), lp["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)              # [T, K]
+    if m.router_norm_topk:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # slot-major position assignment: scan over the K routing slots keeps the
+    # intermediate one-hot at [T, E] instead of [T*K, E].
+    def slot(counts, e_col):
+        oh = jax.nn.one_hot(e_col, E, dtype=jnp.int32)         # [T, E]
+        pos_in = jnp.cumsum(oh, axis=0) - 1                    # [T, E]
+        pos = jnp.take_along_axis(pos_in, e_col[:, None], 1)[:, 0] + counts[e_col]
+        return counts + oh.sum(0), pos
+
+    counts0 = jnp.zeros((E,), jnp.int32)
+    _, pos_k = jax.lax.scan(slot, counts0, top_e.T)            # [K, T]
+    pos = pos_k.T                                              # [T, K]
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C - 1)
+
+    # scatter token ids -> [E, C]; gather token activations
+    tok_ids = jnp.broadcast_to(jnp.arange(T)[:, None], (T, K))
+    idx_buf = jnp.full((E, C), T, jnp.int32)                  # T = OOB sentinel
+    idx_buf = idx_buf.at[top_e, pos_c].set(jnp.where(keep, tok_ids, T),
+                                           mode="drop")
+    x_pad = jnp.concatenate([x, jnp.zeros((1, D), x.dtype)], 0)
+    xe = x_pad[idx_buf]                                        # [E, C, D]
+
+    if cfg.moe_shard == "all":
+        # pin the dispatch layout: expert buffers expert-sharded ('model'),
+        # capacity sharded over 'data' — the gather becomes one all-to-all
+        # instead of GSPMD's default gather-to-replicated (§Perf iteration 2)
+        from jax.sharding import PartitionSpec as _P
+        from jax.lax import with_sharding_constraint as _wsc
+        xe = _wsc(xe, _P("model", "data", None))
+
+    h_g = jnp.einsum("ecd,edf->ecf", xe, lp["e_gate"])
+    h_u = jnp.einsum("ecd,edf->ecf", xe, lp["e_up"])
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h_g) * h_u, lp["e_down"])
+    if cfg.moe_shard == "all":
+        ye = _wsc(ye, _P("model", "data", None))
+
+    # combine: gather each (t, k) slot's output, weight, sum over K
+    y_slots = ye[top_e, pos_c]                                 # [T, K, D]
+    if cfg.moe_shard:
+        from jax.sharding import PartitionSpec as _P2
+        from jax.lax import with_sharding_constraint as _wsc2
+        y_slots = _wsc2(y_slots, _P2("data", None, None))
+    w = (top_p * keep).astype(ye.dtype)
+    y = jnp.einsum("tkd,tk->td", y_slots, w)
+
+    if m.n_shared:
+        g = jax.nn.sigmoid(jnp.einsum("td,dz->tz", x.astype(jnp.float32),
+                                      lp["s_gate_proj"].astype(jnp.float32)))
+        y = y + (g.astype(x.dtype)
+                 * swiglu(x, lp["s_gate"], lp["s_up"], lp["s_down"]))
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------- #
+def _layer_body(cfg: TransformerConfig, cos, sin, x, lp):
+    b, s, d = x.shape
+    h, hkv, hd, g = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.group_size
+
+    xn = rms_norm(x, lp["attn_norm"])
+    q = jnp.einsum("bsd,dh->bsh", xn, lp["wq"])
+    k = jnp.einsum("bsd,dh->bsh", xn, lp["wk"])
+    v = jnp.einsum("bsd,dh->bsh", xn, lp["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(b, s, hkv, g, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    q = apply_rope(q.reshape(b, s, hkv * g, hd), cos, sin).reshape(b, s, hkv, g, hd)
+    k = apply_rope(k, cos, sin)
+    if cfg.attn_chunk_q and s > cfg.attn_chunk_q:
+        attn = chunked_causal_gqa_attention(
+            q, k, v, q_chunk=min(cfg.attn_chunk_q, s),
+            kv_chunk=min(cfg.attn_chunk_kv or cfg.attn_chunk_q, s))
+    else:
+        attn = causal_gqa_attention(q, k, v)
+    attn = attn.reshape(b, s, h * hd)
+    x = x + jnp.einsum("bsh,hd->bsd", attn, lp["wo"])
+
+    xn = rms_norm(x, lp["mlp_norm"])
+    if cfg.moe is None:
+        y = swiglu(xn, lp["w_gate"], lp["w_up"], lp["w_down"])
+    else:
+        y = moe_block(xn.reshape(b * s, d), lp, cfg).reshape(b, s, d)
+    return x + y
+
+
+def forward(params, tokens, cfg: TransformerConfig):
+    """tokens [B, S] → logits [B, S, V]."""
+    b, s = tokens.shape
+    cos, sin = rope_frequencies(cfg.head_dim, s, cfg.rope_theta)
+    x = params["embed"][tokens]
+
+    body = functools.partial(_layer_body, cfg, cos, sin)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, lp):
+        return body(x, lp), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["layers"],
+                        unroll=min(cfg.scan_unroll, cfg.n_layers))
+    x = rms_norm(x, params["final_norm"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def loss_fn(params, batch, cfg: TransformerConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    return cross_entropy_loss(logits, batch["labels"])
+
+
+# --------------------------------------------------------------------- #
+# decode path (serve_step): one token in, KV cache of seq_len
+# --------------------------------------------------------------------- #
+def init_cache(cfg: TransformerConfig, batch: int, seq_len: int):
+    shape = (cfg.n_layers, batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.jnp_dtype),
+            "v": jnp.zeros(shape, cfg.jnp_dtype),
+            "length": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg: TransformerConfig):
+    """tokens [B] (one new token per sequence) → (logits [B, V], new cache).
+
+    The KV cache S axis may be sharded ('model' axis for long_500k): the
+    attention below reduces over S with max/sum combines, which GSPMD turns
+    into the flash-decoding partial-softmax all-reduce.
+    """
+    b = tokens.shape[0]
+    s_cache = cache["k"].shape[2]
+    hkv, g, hd = cfg.n_kv_heads, cfg.group_size, cfg.head_dim
+    length = cache["length"]
+    cos, sin = rope_frequencies(cfg.head_dim, cfg.max_seq_len, cfg.rope_theta)
+    x = params["embed"][tokens][:, None, :]            # [B, 1, D]
+
+    def layer(carry, inputs):
+        x = carry
+        lp, k_cache, v_cache = inputs
+        b = x.shape[0]
+        xn = rms_norm(x, lp["attn_norm"])
+        q = jnp.einsum("bsd,dh->bsh", xn, lp["wq"])
+        k = jnp.einsum("bsd,dh->bsh", xn, lp["wk"])
+        v = jnp.einsum("bsd,dh->bsh", xn, lp["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+        q = q.reshape(b, 1, hkv, g, hd)
+        k = k.reshape(b, 1, hkv, hd)
+        v = v.reshape(b, 1, hkv, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"])
+            k = rms_norm(k, lp["k_norm"])
+        pos = length[:, None]                          # [B, 1]
+        q = apply_rope(q.reshape(b, 1, hkv * g, hd), cos, sin, pos).reshape(
+            b, 1, hkv, g, hd)
+        k = apply_rope(k, cos, sin, pos)
+        # write new KV at position `length` (dynamic per-batch scatter)
+        bidx = jnp.arange(b)
+        k_cache = k_cache.at[bidx, length].set(k[:, 0], mode="drop")
+        v_cache = v_cache.at[bidx, length].set(v[:, 0], mode="drop")
+        attn = decode_gqa_attention(q[:, 0], k_cache, v_cache, length + 1)
+        attn = attn.reshape(b, 1, cfg.n_heads * hd)
+        x = x + jnp.einsum("bsh,hd->bsd", attn, lp["wo"])
+        xn = rms_norm(x, lp["mlp_norm"])
+        if cfg.moe is None:
+            y = swiglu(xn, lp["w_gate"], lp["w_up"], lp["w_down"])
+        else:
+            y = moe_block(xn.reshape(b, -1), lp, cfg).reshape(b, 1, -1)
+        return x + y, (k_cache, v_cache)
+
+    x, (new_k, new_v) = jax.lax.scan(layer, x, (params["layers"],
+                                                cache["k"], cache["v"]),
+                                     unroll=min(cfg.scan_unroll, cfg.n_layers))
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    new_cache = {"k": new_k, "v": new_v, "length": length + 1}
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg: TransformerConfig):
+    """Prefill forward (logits only; used by the prefill_32k shape)."""
+    return forward(params, tokens, cfg)

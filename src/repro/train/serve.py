@@ -1,0 +1,165 @@
+"""Serving loops: dynamic request batching + the two first-stage retrievers.
+
+RetrievalServer serves ranked retrieval straight from an annotative index
+(the paper's workload): queries are micro-batched, impacts are laid out in
+the block-impact format, and scoring runs through either the exhaustive
+device path or the Block-Max Pallas kernel.
+
+LMServer wraps the transformer decode path with a KV cache and a simple
+continuous-batching slot scheduler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import collection_stats, ranking
+from repro.core.vectorized import bm25_topk
+
+
+@dataclasses.dataclass
+class BatcherConfig:
+    max_batch: int = 16
+    max_wait_ms: float = 2.0
+
+
+class MicroBatcher:
+    """Dynamic batching: collect up to max_batch requests or max_wait_ms."""
+
+    def __init__(self, handler: Callable[[List[Any]], List[Any]],
+                 cfg: BatcherConfig):
+        self.handler = handler
+        self.cfg = cfg
+        self._q: "queue.Queue" = queue.Queue()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def submit(self, request) -> "queue.Queue":
+        done: "queue.Queue" = queue.Queue(maxsize=1)
+        self._q.put((request, done))
+        return done
+
+    def _loop(self):
+        while not self._stop.is_set():
+            try:
+                first = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            batch = [first]
+            deadline = time.time() + self.cfg.max_wait_ms / 1e3
+            while len(batch) < self.cfg.max_batch:
+                remaining = deadline - time.time()
+                if remaining <= 0:
+                    break
+                try:
+                    batch.append(self._q.get(timeout=remaining))
+                except queue.Empty:
+                    break
+            results = self.handler([r for r, _ in batch])
+            for (_, done), res in zip(batch, results):
+                done.put(res)
+
+    def close(self):
+        self._stop.set()
+
+
+class RetrievalServer:
+    """BM25 top-k over an annotative index with batched device scoring."""
+
+    def __init__(self, warren, k: int = 10, batcher: BatcherConfig = None,
+                 max_terms: int = 8, max_postings: int = 4096):
+        self.warren = warren
+        self.k = k
+        self.max_terms = max_terms
+        self.max_postings = max_postings
+        with warren:
+            self.stats = collection_stats(warren)
+        self.batcher = MicroBatcher(self._handle, batcher or BatcherConfig())
+
+    def query(self, text: str, timeout: float = 10.0):
+        return self.batcher.submit(text).get(timeout=timeout)
+
+    def _handle(self, queries: List[str]) -> List[List[Tuple[int, float]]]:
+        qn, t, l = len(queries), self.max_terms, self.max_postings
+        doc_idx = np.full((qn, t, l), self.stats.n_docs, np.int32)
+        impacts = np.zeros((qn, t, l), np.float32)
+        qmask = np.zeros((qn, t), np.float32)
+        with self.warren:
+            for qi, text in enumerate(queries):
+                terms = list(dict.fromkeys(ranking.ranking_tokens(text)))[:t]
+                for ti, term in enumerate(terms):
+                    lst = self.warren.annotations(
+                        ranking.TF_PREFIX + ranking.porter_stem(term))
+                    if not len(lst):
+                        continue
+                    idf = np.log(1 + (self.stats.n_docs - len(lst) + 0.5)
+                                 / (len(lst) + 0.5))
+                    di = np.searchsorted(self.stats.doc_starts, lst.starts)
+                    di = np.clip(di, 0, self.stats.n_docs - 1)
+                    ok = self.stats.doc_starts[di] == lst.starts
+                    di, tf = di[ok][:l], lst.values[ok][:l]
+                    dl = self.stats.doc_lens[di]
+                    imp = idf * tf * 1.9 / (tf + 0.9 * (0.6 + 0.4 * dl
+                                                        / self.stats.avgdl))
+                    doc_idx[qi, ti, :len(di)] = di
+                    impacts[qi, ti, :len(di)] = imp
+                    qmask[qi, ti] = 1.0
+        scores, ids = bm25_topk(jnp.asarray(doc_idx), jnp.asarray(impacts),
+                                jnp.asarray(qmask),
+                                n_docs=self.stats.n_docs, k=self.k)
+        scores, ids = np.asarray(scores), np.asarray(ids)
+        out = []
+        for qi in range(qn):
+            res = [(int(self.stats.doc_starts[d]), float(s))
+                   for d, s in zip(ids[qi], scores[qi]) if s > 0]
+            out.append(res)
+        return out
+
+    def close(self):
+        self.batcher.close()
+
+
+class LMServer:
+    """Continuous-batching decode server over the transformer decode path."""
+
+    def __init__(self, params, cfg, max_slots: int = 8, max_len: int = 128):
+        from repro.models import transformer as T
+        self.T = T
+        self.params = params
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.cache = T.init_cache(cfg, max_slots, max_len)
+        self.step_fn = jax.jit(lambda p, c, t: T.decode_step(p, c, t, cfg))
+        self.slot_free = [True] * max_slots
+        self.slot_out: List[List[int]] = [[] for _ in range(max_slots)]
+
+    def generate(self, prompts: List[List[int]], max_new: int = 16
+                 ) -> List[List[int]]:
+        """Greedy-decode a batch of prompts (token-id lists)."""
+        assert len(prompts) <= self.max_slots
+        outs = [[] for _ in prompts]
+        # prefill by stepping prompts token by token (cache fills)
+        tokens = np.zeros((self.max_slots,), np.int32)
+        max_prompt = max(len(p) for p in prompts)
+        for i in range(max_prompt + max_new):
+            for s, p in enumerate(prompts):
+                if i < len(p):
+                    tokens[s] = p[i]
+            logits, self.cache = self.step_fn(self.params, self.cache,
+                                              jnp.asarray(tokens))
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            for s, p in enumerate(prompts):
+                if i >= len(p) - 1:
+                    outs[s].append(int(nxt[s]))
+                    if i + 1 >= len(p):
+                        tokens[s] = int(nxt[s])
+        return [o[:max_new] for o in outs]

@@ -1,0 +1,164 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler mitigation.
+
+The loop is deliberately framework-shaped:
+
+  * jit'd full step (donated params/opt) over an explicit mesh,
+  * async checkpoints every `ckpt_every` steps (data-iterator state rides
+    along, so restart resumes the exact batch stream),
+  * `run_with_restarts` re-enters the loop after a failure, restoring the
+    latest checkpoint — the single-process analogue of a scheduler retry,
+  * straggler mitigation at the input edge: a prefetch thread with a
+    bounded wait; a late batch is *skipped* (logged) and backfilled by the
+    next ready one, bounding step-time tail latency at the cost of sample
+    order (the standard data-path trick when an input shard straggles).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.dist.checkpoint import CheckpointManager
+from repro.train.optimizer import (AdamWConfig, init_opt_state,
+                                   make_train_step)
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+    straggler_timeout_s: float = 5.0
+    prefetch: int = 2
+
+
+class _Prefetcher:
+    """Bounded-queue prefetch thread with skip-and-backfill on timeout."""
+
+    def __init__(self, it: Iterator, depth: int):
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._it = it
+        self._done = False
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._done = True
+            self._q.put(None)
+
+    def get(self, timeout: Optional[float]):
+        try:
+            item = self._q.get(timeout=timeout)
+        except queue.Empty:
+            return "TIMEOUT"
+        return item
+
+
+class Trainer:
+    def __init__(self, loss_fn: Callable, params, cfg: TrainerConfig,
+                 data_iter: Iterator, data_state_fn: Callable = None,
+                 data_restore_fn: Callable = None, step_fn=None):
+        self.cfg = cfg
+        self.params = params
+        self.opt_state = init_opt_state(params)
+        self.step_fn = step_fn or jax.jit(make_train_step(loss_fn, cfg.opt),
+                                          donate_argnums=(0, 1))
+        self.data_iter = data_iter
+        self.data_state_fn = data_state_fn or (lambda: {})
+        self.data_restore_fn = data_restore_fn or (lambda s: None)
+        self.step = 0
+        self.metrics_log: list = []
+        self.skipped_batches = 0
+        self.ckpt = (CheckpointManager(cfg.ckpt_dir)
+                     if cfg.ckpt_dir else None)
+
+    # ------------------------------------------------------------------ #
+    def maybe_restore(self) -> bool:
+        if self.ckpt is None:
+            return False
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        like = {"params": self.params, "opt": self.opt_state,
+                "step": 0, "data": self.data_state_fn()}
+        state = self.ckpt.restore(latest, like)
+        self.params = state["params"]
+        self.opt_state = state["opt"]
+        self.step = int(state["step"])
+        self.data_restore_fn(state["data"])
+        return True
+
+    def _save(self, block=False):
+        if self.ckpt is None or getattr(self, "_last_saved", -1) == self.step:
+            return
+        self._last_saved = self.step
+        # data state must reflect batches *consumed*, not prefetched: prefer
+        # the per-batch state stamped by the loader over the live iterator.
+        data_state = getattr(self, "_consumed_data_state", None)
+        if data_state is None:
+            data_state = self.data_state_fn()
+        self.ckpt.save(self.step, {
+            "params": self.params, "opt": self.opt_state,
+            "step": self.step, "data": data_state}, block=block)
+
+    # ------------------------------------------------------------------ #
+    def train(self, fail_at: Optional[int] = None) -> Dict[str, Any]:
+        """Run to total_steps; `fail_at` injects a crash (tests)."""
+        pf = _Prefetcher(self.data_iter, self.cfg.prefetch)
+        while self.step < self.cfg.total_steps:
+            batch = pf.get(timeout=self.cfg.straggler_timeout_s)
+            if batch == "TIMEOUT":
+                self.skipped_batches += 1   # skip-and-backfill
+                continue
+            if batch is None:
+                break
+            if fail_at is not None and self.step == fail_at:
+                raise RuntimeError(f"injected failure at step {self.step}")
+            if "_state" in batch:
+                self._consumed_data_state = batch["_state"]
+            batch = {k: v for k, v in batch.items()
+                     if k not in ("step", "_state")}
+            self.params, self.opt_state, m = self.step_fn(
+                self.params, self.opt_state, batch)
+            self.step += 1
+            if self.step % self.cfg.log_every == 0 or \
+                    self.step == self.cfg.total_steps:
+                self.metrics_log.append(
+                    {"step": self.step, "loss": float(m["loss"]),
+                     "grad_norm": float(m["grad_norm"])})
+            if self.step % self.cfg.ckpt_every == 0:
+                self._save()
+        self._save(block=True)
+        return {"step": self.step, "metrics": self.metrics_log,
+                "skipped": self.skipped_batches}
+
+
+def run_with_restarts(make_trainer: Callable[[], Trainer],
+                      max_failures: int = 3,
+                      fail_at: Optional[int] = None) -> Trainer:
+    """Scheduler-retry analogue: rebuild the trainer, restore, continue."""
+    failures = 0
+    inject = fail_at
+    while True:
+        trainer = make_trainer()
+        trainer.maybe_restore()
+        try:
+            trainer.train(fail_at=inject)
+            return trainer
+        except RuntimeError:
+            failures += 1
+            inject = None       # the injected failure happens once
+            if failures > max_failures:
+                raise

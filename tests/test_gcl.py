@@ -1,0 +1,184 @@
+"""GCL operator algebra vs a brute-force oracle (the core paper machinery)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.annotation import INF, NINF, AnnotationList, reduce_minimal
+from repro.core import gcl
+
+
+# --------------------------------------------------------------------- #
+# brute-force oracle
+# --------------------------------------------------------------------- #
+def contains(outer, inner):
+    return outer[0] <= inner[0] and inner[1] <= outer[1]
+
+
+def brute_contained_in(A, B):
+    return [a for a in A if any(contains(b, a) for b in B)]
+
+
+def brute_containing(A, B):
+    return [a for a in A if any(contains(a, b) for b in B)]
+
+
+def brute_not_contained_in(A, B):
+    return [a for a in A if not any(contains(b, a) for b in B)]
+
+
+def brute_not_containing(A, B):
+    return [a for a in A if not any(contains(a, b) for b in B)]
+
+
+def g_reduce(intervals):
+    ivs = sorted(set(intervals))
+    return [a for a in ivs
+            if not any(b != a and contains(a, b) for b in ivs)]
+
+
+def brute_both_of(A, B):
+    return g_reduce([(min(a[0], b[0]), max(a[1], b[1])) for a in A for b in B])
+
+
+def brute_one_of(A, B):
+    return g_reduce([a[:2] for a in A] + [b[:2] for b in B])
+
+
+def brute_followed_by(A, B):
+    return g_reduce([(a[0], b[1]) for a in A for b in B if a[1] < b[0]])
+
+
+def make_gc_list(intervals_with_values):
+    if not intervals_with_values:
+        return AnnotationList.empty()
+    s = np.array([i[0] for i in intervals_with_values], dtype=np.int64)
+    e = np.array([i[1] for i in intervals_with_values], dtype=np.int64)
+    v = np.array([i[2] if len(i) > 2 else 0.0 for i in intervals_with_values])
+    return reduce_minimal(s, e, v)
+
+
+gc_list_strategy = st.lists(
+    st.tuples(st.integers(0, 40), st.integers(0, 12)).map(lambda t: (t[0], t[0] + t[1])),
+    max_size=14,
+)
+
+OPS = {
+    "contained_in": (gcl.ContainedIn, brute_contained_in),
+    "containing": (gcl.Containing, brute_containing),
+    "not_contained_in": (gcl.NotContainedIn, brute_not_contained_in),
+    "not_containing": (gcl.NotContaining, brute_not_containing),
+    "both_of": (gcl.BothOf, brute_both_of),
+    "one_of": (gcl.OneOf, brute_one_of),
+    "followed_by": (gcl.FollowedBy, brute_followed_by),
+}
+
+
+def check_op(name, a_ivs, b_ivs):
+    node_cls, brute = OPS[name]
+    A = make_gc_list(a_ivs)
+    B = make_gc_list(b_ivs)
+    a_min = [(int(p), int(q)) for p, q, _ in A]
+    b_min = [(int(p), int(q)) for p, q, _ in B]
+    expected = sorted(set(i[:2] for i in brute(a_min, b_min)))
+
+    node = node_cls(gcl.Term(A), gcl.Term(B))
+    got = [(p, q) for p, q, _ in node.solutions()]
+    assert got == expected, f"{name}: solutions {got} != {expected}"
+
+    # access-method pointwise checks (fresh node per probe: no cursor reuse)
+    for k in range(-2, 60):
+        n = node_cls(gcl.Term(A), gcl.Term(B))
+        t = n.tau(k)
+        exp = next((s for s in expected if s[0] >= k), None)
+        assert (t[:2] == exp if exp else t[1] >= INF), f"{name}.tau({k})={t} exp={exp}"
+
+        n = node_cls(gcl.Term(A), gcl.Term(B))
+        r = n.rho(k)
+        exp = next((s for s in expected if s[1] >= k), None)
+        assert (r[:2] == exp if exp else r[1] >= INF), f"{name}.rho({k})={r} exp={exp}"
+
+        n = node_cls(gcl.Term(A), gcl.Term(B))
+        tb = n.tau_b(k)
+        exp = next((s for s in reversed(expected) if s[0] <= k), None)
+        assert (tb[:2] == exp if exp else tb[0] <= NINF), f"{name}.tau_b({k})={tb} exp={exp}"
+
+        n = node_cls(gcl.Term(A), gcl.Term(B))
+        rb = n.rho_b(k)
+        exp = next((s for s in reversed(expected) if s[1] <= k), None)
+        assert (rb[:2] == exp if exp else rb[0] <= NINF), f"{name}.rho_b({k})={rb} exp={exp}"
+
+
+@pytest.mark.parametrize("name", list(OPS))
+@settings(max_examples=120, deadline=None)
+@given(a=gc_list_strategy, b=gc_list_strategy)
+def test_operator_matches_brute_force(name, a, b):
+    check_op(name, a, b)
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=gc_list_strategy, b=gc_list_strategy, c=gc_list_strategy)
+def test_nested_operator_composition(a, b, c):
+    """(A △ B) ⊲ C and (A ▽ B) ◇ C against oracle composition."""
+    A, B, C = make_gc_list(a), make_gc_list(b), make_gc_list(c)
+    a_min = [(int(p), int(q)) for p, q, _ in A]
+    b_min = [(int(p), int(q)) for p, q, _ in B]
+    c_min = [(int(p), int(q)) for p, q, _ in C]
+
+    node = gcl.ContainedIn(gcl.BothOf(gcl.Term(A), gcl.Term(B)), gcl.Term(C))
+    got = [(p, q) for p, q, _ in node.solutions()]
+    expected = sorted(set(brute_contained_in(brute_both_of(a_min, b_min), c_min)))
+    assert got == expected
+
+    node = gcl.FollowedBy(gcl.OneOf(gcl.Term(A), gcl.Term(B)), gcl.Term(C))
+    got = [(p, q) for p, q, _ in node.solutions()]
+    expected = sorted(set(brute_followed_by(brute_one_of(a_min, b_min), c_min)))
+    assert got == expected
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=gc_list_strategy)
+def test_minimal_interval_invariant(a):
+    """reduce_minimal produces strictly increasing starts and ends."""
+    A = make_gc_list(a)
+    if len(A) > 1:
+        assert np.all(np.diff(A.starts) > 0)
+        assert np.all(np.diff(A.ends) > 0)
+    # idempotent
+    again = reduce_minimal(A.starts, A.ends, A.values)
+    assert again == A
+
+
+def test_values_preserved_by_containment_and_merge():
+    A = make_gc_list([(0, 1, 5.0), (10, 12, 7.0)])
+    B = make_gc_list([(0, 4, 0.0)])
+    node = gcl.ContainedIn(gcl.Term(A), gcl.Term(B))
+    assert node.solutions() == [(0, 1, 5.0)]
+    node = gcl.OneOf(gcl.Term(A), gcl.Term(B))
+    sols = node.solutions()
+    assert (0, 1, 5.0) in sols and (10, 12, 7.0) in sols
+
+
+def test_phrase():
+    # tokens: "to be or not to be" at addresses 0..5
+    toks = {"to": [0, 4], "be": [1, 5], "or": [2], "not": [3]}
+    lists = {w: make_gc_list([(p, p) for p in ps]) for w, ps in toks.items()}
+    phrase = gcl.Phrase([gcl.Term(lists["to"]), gcl.Term(lists["be"])])
+    assert [(p, q) for p, q, _ in phrase.solutions()] == [(0, 1), (4, 5)]
+    phrase = gcl.Phrase([gcl.Term(lists["not"]), gcl.Term(lists["to"]), gcl.Term(lists["be"])])
+    assert [(p, q) for p, q, _ in phrase.solutions()] == [(3, 5)]
+    # τ_b from the right
+    phrase = gcl.Phrase([gcl.Term(lists["to"]), gcl.Term(lists["be"])])
+    assert phrase.tau_b(100)[:2] == (4, 5)
+    assert phrase.tau_b(3)[:2] == (0, 1)
+
+
+def test_paper_example_overlap():
+    """'peanut butter △ jelly doughnut' sentence with two overlapping wits."""
+    # Peanut(0) butter(1) on(2) a(3) jelly(4) doughnut(5) is(6) not(7) good(8)
+    # as(9) a(10) peanut(11) butter(12) sandwich(13)
+    pb = make_gc_list([(0, 1), (11, 12)])
+    jd = make_gc_list([(4, 5)])
+    node = gcl.BothOf(gcl.Term(pb), gcl.Term(jd))
+    sols = [(p, q) for p, q, _ in node.solutions()]
+    assert sols == [(0, 5), (4, 12)]  # overlapping, non-nesting witnesses

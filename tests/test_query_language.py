@@ -1,0 +1,79 @@
+"""Structural query language: text syntax → GCL trees → solutions."""
+
+import pytest
+
+from repro.core import DynamicIndex, Warren, add_json
+from repro.core.query import QueryError, parse_query, solve
+from repro.data.synth import json_collection
+
+
+@pytest.fixture(scope="module")
+def warren():
+    w = Warren(DynamicIndex())
+    data = json_collection(seed=0, scale=0.4)
+    with w:
+        w.transaction()
+        for name, objs in data.items():
+            for obj in objs:
+                add_json(w, obj, collection=f"Files/{name}.json")
+        w.commit()
+    return w
+
+
+def test_containment_query(warren):
+    with warren:
+        got = solve('[:city:] >> "new york" << [Files/zips.json]', warren)
+        # oracle: direct GCL construction
+        from repro.core.gcl import ContainedIn, Containing
+        want = ContainedIn(Containing(warren.hopper(":city:"),
+                                      warren.phrase("new york")),
+                           warren.hopper("Files/zips.json")).solutions()
+        assert got == want
+        assert len(got) > 0
+
+
+def test_or_and_precedence(warren):
+    with warren:
+        q = "[:title:] | [:authors:] << [Files/books.json]"
+        got = solve(q, warren)
+        # << binds tighter than |
+        from repro.core.gcl import ContainedIn, OneOf
+        want = OneOf(warren.hopper(":title:"),
+                     ContainedIn(warren.hopper(":authors:"),
+                                 warren.hopper("Files/books.json"))).solutions()
+        assert got == want
+
+
+def test_parens_and_both(warren):
+    with warren:
+        got = solve("([:name:] & [:cuisine:]) << [Files/restaurant.json]",
+                    warren)
+        assert len(got) > 0
+
+
+def test_followed_by(warren):
+    with warren:
+        got = solve('"company" ... "nanotech"', warren)
+        # every witness starts at a "company" token and ends at a later
+        # "nanotech" token
+        for p, q, _ in got:
+            assert p < q
+
+
+def test_not_contained(warren):
+    with warren:
+        all_names = solve("[:name:]", warren)
+        not_rest = solve("[:name:] !<< [Files/restaurant.json]", warren)
+        in_rest = solve("[:name:] << [Files/restaurant.json]", warren)
+        assert len(not_rest) + len(in_rest) == len(all_names)
+
+
+def test_word_atom_and_errors(warren):
+    with warren:
+        assert solve("nanotech", warren)
+        with pytest.raises(QueryError):
+            parse_query("[:a:] <<", warren)
+        with pytest.raises(QueryError):
+            parse_query("(unclosed", warren)
+        with pytest.raises(QueryError):
+            parse_query('"unclosed phrase', warren)

@@ -1,0 +1,68 @@
+"""Learned-sparse retrieval (§2.2) + edge-list graph encoding (Conclusion)."""
+
+import numpy as np
+
+from repro.core import (DynamicIndex, GraphStore, Warren, add_json,
+                        index_document, score_bm25)
+from repro.core.sparse import (index_sparse_vector, score_hybrid,
+                               score_sparse)
+
+
+def test_sparse_vectors_coexist_with_bm25():
+    w = Warren(DynamicIndex())
+    docs = ["the quick brown fox", "lazy dogs sleep all day",
+            "foxes hunt at night", "markets rallied on tech news"]
+    extents = []
+    with w:
+        w.transaction()
+        for i, d in enumerate(docs):
+            extents.append(index_document(w, d, docid=str(i)))
+        remap = w.commit()
+    extents = [(remap(a), remap(b)) for a, b in extents]
+
+    # learned-sparse weights added LATER, separate transaction (§5 model)
+    vecs = [{"fox": 2.1, "animal": 1.3},          # expansion terms!
+            {"dog": 1.8, "animal": 1.2, "rest": 0.7},
+            {"fox": 1.9, "hunt": 1.5, "animal": 0.9},
+            {"finance": 2.2, "market": 1.7}]
+    with w:
+        w.transaction()
+        for ext, vec in zip(extents, vecs):
+            index_sparse_vector(w, ext, vec, method="splade")
+        w.commit()
+
+    with w:
+        # sparse-only: "animal" matches docs 0,1,2 via expansion
+        top = score_sparse(w, {"animal": 1.0}, k=4)
+        assert len(top) == 3
+        assert {d for d, _ in top} == {e[0] for e in extents[:3]}
+        # both methods over one index; hybrid fuses them
+        bm = score_bm25(w, "fox", k=2)
+        hy = score_hybrid(w, "fox", {"fox": 1.0, "animal": 0.5}, k=3)
+        assert bm and hy
+        assert hy[0][0] in (extents[0][0], extents[2][0])
+
+
+def test_edge_list_encoding_no_dangling_refs():
+    w = Warren(DynamicIndex())
+    g = GraphStore(w)
+    with w:
+        w.transaction()
+        a = g.add_node({"name": "a"})
+        b = g.add_node({"name": "b"})
+        c = g.add_node({"name": "c"})
+        remap = w.commit()
+    a, b, c = [(remap(x[0]), remap(x[1])) for x in (a, b, c)]
+    with w:
+        w.transaction()
+        g.add_out_edges("@follows", a, [b[0], c[0]])
+        w.commit()
+    with w:
+        assert sorted(g.out_edges("@follows", a)) == sorted([b[0], c[0]])
+    # delete node c: its edge entries vanish with it (the encoding's point)
+    with w:
+        w.transaction()
+        w.erase(*c)
+        w.commit()
+    with w:
+        assert g.out_edges("@follows", a) == [b[0]]

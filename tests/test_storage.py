@@ -1,0 +1,97 @@
+"""vByte codec, static index, graph store."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DynamicIndex, GraphStore, StaticIndex, Warren,
+                        add_json, index_document, score_bm25, write_static)
+from repro.core import vbyte
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.integers(0, 2**48), max_size=200))
+def test_vbyte_roundtrip(values):
+    arr = np.array(values, dtype=np.int64)
+    enc = vbyte.encode(arr)
+    dec = vbyte.decode(enc, len(arr))
+    assert np.array_equal(dec, arr)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(-2**40, 2**40), max_size=100))
+def test_zigzag_roundtrip(values):
+    arr = np.array(values, dtype=np.int64)
+    assert np.array_equal(vbyte.unzigzag(vbyte.zigzag(arr)), arr)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 2**32), min_size=1, max_size=100, unique=True))
+def test_gap_roundtrip(values):
+    arr = np.sort(np.array(values, dtype=np.int64))
+    enc = vbyte.encode_gaps(arr)
+    assert np.array_equal(vbyte.decode_gaps(enc, len(arr)), arr)
+
+
+def test_static_index_roundtrip(tmp_path):
+    idx = DynamicIndex()
+    w = Warren(idx)
+    with w:
+        w.transaction()
+        for i in range(10):
+            index_document(w, f"static document {i} with shared words fox")
+        w.commit()
+    d = str(tmp_path / "static")
+    write_static(idx, d)
+    si = StaticIndex(d)
+    assert len(si.annotations(":")) == 10
+    assert len(si.annotations("fox")) == 10
+    # ranking works against the static index too (same read surface)
+    top = score_bm25(si, "fox shared", k=3)
+    assert len(top) == 3
+    # translate round trip
+    doc0 = si.annotations(":")
+    t = si.translate(int(doc0.starts[0]), int(doc0.ends[0]))
+    assert t.startswith("static document 0")
+    si.close()
+
+
+def test_graph_store_friends():
+    w = Warren(DynamicIndex())
+    g = GraphStore(w)
+    with w:
+        w.transaction()
+        people = {}
+        for name in ["Alice", "Bob", "Carol", "Dave"]:
+            people[name] = g.add_node({"name": name})
+        edges = {"Alice": ["Bob", "Carol", "Dave"], "Bob": ["Alice", "Dave"],
+                 "Carol": ["Alice"], "Dave": ["Bob", "Alice"]}
+        for src, dsts in edges.items():
+            for dst in dsts:
+                g.add_edge("@friend", people[src][0], people[dst][0])
+        remap = w.commit()
+    people = {k: (remap(lo), remap(hi)) for k, (lo, hi) in people.items()}
+    with w:
+        nbrs = g.neighbors("@friend", *people["Alice"])
+        assert sorted(nbrs) == sorted([people[n][0] for n in ["Bob", "Carol", "Dave"]])
+        # resolve a target address back to its containing object
+        obj = g.containing_object(nbrs[0])
+        assert obj in people.values()
+        # BFS reaches everyone from Carol
+        reached = list(g.bfs("@friend", people["Carol"]))
+        assert len(reached) == 4
+
+
+def test_graph_store_triples():
+    w = Warren(DynamicIndex())
+    g = GraphStore(w)
+    with w:
+        w.transaction()
+        streep = g.add_node({"name": "Meryl Streep"})
+        oscar = g.add_node({"name": "Best Actress"})
+        g.add_triple(streep[0], "won_award", oscar[0])
+        remap = w.commit()
+    streep = (remap(streep[0]), remap(streep[1]))
+    oscar = (remap(oscar[0]), remap(oscar[1]))
+    with w:
+        objs = g.objects_of(streep, "won_award")
+        assert objs == [oscar[0]]

@@ -1,0 +1,104 @@
+"""Vectorized (device) GCL engine vs the lazy reference engine."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gcl
+from repro.core.annotation import AnnotationList, reduce_minimal
+from repro.core import vectorized as V
+
+
+gc_strategy = st.lists(
+    st.tuples(st.integers(0, 60), st.integers(0, 10)).map(lambda t: (t[0], t[0] + t[1])),
+    max_size=16,
+)
+
+
+def make(ivs):
+    if not ivs:
+        return AnnotationList.empty()
+    s = np.array([i[0] for i in ivs], dtype=np.int64)
+    e = np.array([i[1] for i in ivs], dtype=np.int64)
+    return reduce_minimal(s, e, np.zeros(len(ivs)))
+
+
+def lazy_solutions(node):
+    return [(p, q) for p, q, _ in node.solutions()]
+
+
+OPS = {
+    "contained_in": (gcl.ContainedIn, lambda A, B: V.contained_in(
+        *V.pack(A.starts, A.ends, A.values), *V.pack(B.starts, B.ends)[:2])[:2]),
+    "containing": (gcl.Containing, lambda A, B: V.containing(
+        *V.pack(A.starts, A.ends, A.values), *V.pack(B.starts, B.ends)[:2])[:2]),
+    "not_contained_in": (gcl.NotContainedIn, lambda A, B: V.not_contained_in(
+        *V.pack(A.starts, A.ends, A.values), *V.pack(B.starts, B.ends)[:2])[:2]),
+    "not_containing": (gcl.NotContaining, lambda A, B: V.not_containing(
+        *V.pack(A.starts, A.ends, A.values), *V.pack(B.starts, B.ends)[:2])[:2]),
+    "both_of": (gcl.BothOf, lambda A, B: V.both_of(
+        *V.pack(A.starts, A.ends)[:2], *V.pack(B.starts, B.ends)[:2])),
+    "one_of": (gcl.OneOf, lambda A, B: V.one_of(
+        *V.pack(A.starts, A.ends)[:2], *V.pack(B.starts, B.ends)[:2])),
+    "followed_by": (gcl.FollowedBy, lambda A, B: V.followed_by(
+        *V.pack(A.starts, A.ends)[:2], *V.pack(B.starts, B.ends)[:2])),
+}
+
+
+@pytest.mark.parametrize("name", list(OPS))
+@settings(max_examples=80, deadline=None)
+@given(a=gc_strategy, b=gc_strategy)
+def test_vectorized_matches_lazy(name, a, b):
+    A, B = make(a), make(b)
+    node_cls, vec = OPS[name]
+    want = lazy_solutions(node_cls(gcl.Term(A), gcl.Term(B)))
+    s, e = vec(A, B)
+    got_s, got_e, _ = V.unpack(s, e)
+    got = sorted(zip(got_s.tolist(), got_e.tolist()))
+    assert got == want, f"{name}: {got} != {want}"
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=gc_strategy)
+def test_tau_rho_batched(a):
+    A = make(a)
+    s, e, _ = V.pack(A.starts, A.ends)
+    ks = np.arange(-2, 75)
+    ts, te = V.tau(s, e, ks)
+    rs, re = V.rho(s, e, ks)
+    term = gcl.Term(A)
+    for i, k in enumerate(ks):
+        want_t = term.tau(int(k))
+        want_r = term.rho(int(k))
+        if want_t[1] >= gcl.INF:
+            assert int(ts[i]) == V.PAD
+        else:
+            assert (int(ts[i]), int(te[i])) == want_t[:2]
+        if want_r[1] >= gcl.INF:
+            assert int(rs[i]) == V.PAD
+        else:
+            assert (int(rs[i]), int(re[i])) == want_r[:2]
+
+
+def test_bm25_topk_batched():
+    rng = np.random.default_rng(3)
+    n_docs, q, t, l, k = 500, 4, 3, 40, 10
+    doc_idx = rng.integers(0, n_docs, size=(q, t, l)).astype(np.int32)
+    impacts = rng.random((q, t, l)).astype(np.float32)
+    # pad some entries
+    padmask = rng.random((q, t, l)) < 0.3
+    doc_idx[padmask] = n_docs  # drop
+    impacts[padmask] = 0.0
+    qmask = np.ones((q, t), np.float32)
+    scores, ids = V.bm25_topk(doc_idx, impacts, qmask, n_docs=n_docs, k=k)
+    # oracle per query
+    for qi in range(q):
+        acc = np.zeros(n_docs)
+        for ti in range(t):
+            for li in range(l):
+                d = doc_idx[qi, ti, li]
+                if d < n_docs:
+                    acc[d] += impacts[qi, ti, li]
+        order = np.argsort(-acc, kind="stable")[:k]
+        np.testing.assert_allclose(np.sort(np.asarray(scores[qi]))[::-1],
+                                   np.sort(acc[order])[::-1], rtol=1e-5)
