@@ -21,8 +21,12 @@ from repro.data.synth import doc_generator
 
 
 def run(n_years: int = 3, files_per_year: int = 6, docs_per_file: int = 20,
-        n_queries: int = 12, n_writers: int = 4):
-    warren = Warren(DynamicIndex())
+        n_queries: int = 12, n_writers: int = 4, shards: int = 1):
+    if shards > 1:
+        from repro.dist.shard_router import ShardedWarren
+        warren = ShardedWarren(n_shards=shards)
+    else:
+        warren = Warren(DynamicIndex())
     rng = np.random.default_rng(0)
     queries = {}
     for y in range(n_years):
@@ -152,4 +156,12 @@ def run(n_years: int = 3, files_per_year: int = 6, docs_per_file: int = 20,
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=1,
+                    help="partition the index over N shards (ShardedWarren)")
+    ap.add_argument("--years", type=int, default=3)
+    ap.add_argument("--writers", type=int, default=4)
+    args = ap.parse_args()
+    run(n_years=args.years, n_writers=args.writers, shards=args.shards)

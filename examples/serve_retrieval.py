@@ -27,9 +27,15 @@ from repro.train.serve import RetrievalServer
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=2000)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="serve from N hash-partitioned index shards")
     args = ap.parse_args()
 
-    warren = Warren(DynamicIndex())
+    if args.shards > 1:
+        from repro.dist.shard_router import ShardedWarren
+        warren = ShardedWarren(n_shards=args.shards)
+    else:
+        warren = Warren(DynamicIndex())
     t0 = time.time()
     it = doc_generator(0, args.docs)
     while True:

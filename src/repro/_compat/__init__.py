@@ -1,0 +1,1 @@
+"""Pure-stdlib fallbacks for optional test/runtime dependencies."""

@@ -1,0 +1,156 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API surface the
+test-suite uses, so property tests still run (as seeded random sampling)
+in environments where the real package cannot be installed.
+
+Covers: ``@given`` (positional + keyword strategies), ``@settings``
+(max_examples / deadline), and ``strategies.integers / floats / lists /
+tuples / sampled_from`` with ``.map`` and ``.filter``.  No shrinking, no
+database — when the real hypothesis is importable, ``install()`` is a
+no-op and the genuine package wins.
+
+The draw sequence is seeded from the test's qualified name (crc32, not the
+salted builtin hash), so failures reproduce across runs.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 50
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def map(self, f) -> "SearchStrategy":
+        return SearchStrategy(lambda rnd: f(self._draw(rnd)))
+
+    def filter(self, pred) -> "SearchStrategy":
+        def draw(rnd):
+            for _ in range(1000):
+                v = self._draw(rnd)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too restrictive")
+        return SearchStrategy(draw)
+
+
+def integers(min_value=None, max_value=None) -> SearchStrategy:
+    lo = -(2 ** 63) if min_value is None else int(min_value)
+    hi = 2 ** 63 if max_value is None else int(max_value)
+
+    def draw(rnd):
+        # mix small boundary-ish values with the full range
+        if rnd.random() < 0.25:
+            return rnd.choice([lo, hi, min(lo + 1, hi), max(hi - 1, lo),
+                               min(max(0, lo), hi)])
+        return rnd.randint(lo, hi)
+    return SearchStrategy(draw)
+
+
+def floats(min_value=None, max_value=None, allow_nan=False,
+           allow_infinity=False, width=64) -> SearchStrategy:
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+    return SearchStrategy(lambda rnd: rnd.uniform(lo, hi))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0, max_size=None,
+          unique: bool = False) -> SearchStrategy:
+    def draw(rnd):
+        hi = (min_size + 20) if max_size is None else max_size
+        n = rnd.randint(min_size, hi)
+        out, seen, attempts = [], set(), 0
+        while len(out) < n and attempts < 20 * n + 50:
+            attempts += 1
+            v = elements.example(rnd)
+            if unique:
+                key = v if not isinstance(v, list) else tuple(v)
+                if key in seen:
+                    continue
+                seen.add(key)
+            out.append(v)
+        return out
+    return SearchStrategy(draw)
+
+
+def tuples(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: tuple(s.example(rnd) for s in strats))
+
+
+def sampled_from(seq) -> SearchStrategy:
+    seq = list(seq)
+    return SearchStrategy(lambda rnd: rnd.choice(seq))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.random() < 0.5)
+
+
+def given(*pos_strats, **kw_strats):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        # positional strategies bind the RIGHTMOST unbound parameters,
+        # matching real hypothesis
+        free = [n for n in names if n not in kw_strats]
+        pos_names = free[len(free) - len(pos_strats):] if pos_strats else []
+        bound = set(pos_names) | set(kw_strats)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n_ex = getattr(wrapper, "_hyp_max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            for i in range(n_ex):
+                rnd = random.Random((seed + i) & 0xFFFFFFFF)
+                drawn = {n: s.example(rnd)
+                         for n, s in zip(pos_names, pos_strats)}
+                for n, s in kw_strats.items():
+                    drawn[n] = s.example(rnd)
+                fn(*args, **{**kwargs, **drawn})
+
+        # hide the strategy-bound params so pytest doesn't see fixtures
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for n, p in sig.parameters.items()
+                        if n not in bound])
+        wrapper.is_hypothesis_test = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def install() -> bool:
+    """Register the stub as ``hypothesis`` iff the real one is absent."""
+    try:
+        import hypothesis  # noqa: F401
+        return False
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.SearchStrategy = SearchStrategy
+    mod.__is_repro_stub__ = True
+    st = types.ModuleType("hypothesis.strategies")
+    for f in (integers, floats, lists, tuples, sampled_from, booleans):
+        setattr(st, f.__name__, f)
+    st.SearchStrategy = SearchStrategy
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+    return True

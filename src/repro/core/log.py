@@ -1,6 +1,7 @@
 """Durable transaction log for the dynamic index (paper §5).
 
-Append-only file of zstd-compressed msgpack frames:
+Append-only file of compressed msgpack frames (zstd when available, zlib
+otherwise — see core/codec.py; the codec byte lives in the blob header):
 
   {"t": "ready",  "seq": n, "base": p, "length": L, ...payload}
   {"t": "commit", "seq": n}
@@ -21,7 +22,8 @@ import threading
 from typing import Any, Dict, Iterator, List, Optional
 
 import msgpack
-import zstandard
+
+from . import codec
 
 _MAGIC = b"ANOTLOG1"
 
@@ -31,8 +33,6 @@ class TransactionLog:
         """path=None gives an in-memory (non-durable) log, useful for tests."""
         self.path = path
         self._lock = threading.Lock()
-        self._cctx = zstandard.ZstdCompressor(level=3)
-        self._dctx = zstandard.ZstdDecompressor()
         self._fh = None
         self._mem: List[bytes] = []
         if path is not None:
@@ -45,7 +45,7 @@ class TransactionLog:
 
     # ------------------------------------------------------------------ #
     def _write_frame(self, record: Dict[str, Any], sync: bool = True) -> None:
-        payload = self._cctx.compress(msgpack.packb(record, use_bin_type=True))
+        payload = codec.compress(msgpack.packb(record, use_bin_type=True))
         frame = struct.pack("<I", len(payload)) + payload
         with self._lock:
             if self._fh is not None:
@@ -76,14 +76,14 @@ class TransactionLog:
                     payload = fh.read(n)
                     if len(payload) < n:
                         return  # torn tail frame: treat as not written
-                    yield msgpack.unpackb(self._dctx.decompress(payload),
+                    yield msgpack.unpackb(codec.decompress(payload),
                                           raw=False, strict_map_key=False)
         else:
             with self._lock:
                 frames = list(self._mem)
             for frame in frames:
                 (n,) = struct.unpack("<I", frame[:4])
-                yield msgpack.unpackb(self._dctx.decompress(frame[4:4 + n]),
+                yield msgpack.unpackb(codec.decompress(frame[4:4 + n]),
                                       raw=False, strict_map_key=False)
 
     def compact(self, snapshot_records: List[Dict[str, Any]]) -> None:
@@ -95,11 +95,10 @@ class TransactionLog:
                 self._write_frame(r, sync=False)
             return
         tmp = self.path + ".compact"
-        cctx = self._cctx
         with open(tmp, "wb") as fh:
             fh.write(_MAGIC)
             for r in snapshot_records:
-                payload = cctx.compress(msgpack.packb(r, use_bin_type=True))
+                payload = codec.compress(msgpack.packb(r, use_bin_type=True))
                 fh.write(struct.pack("<I", len(payload)) + payload)
             fh.flush()
             os.fsync(fh.fileno())

@@ -23,9 +23,8 @@ from typing import Dict, List, Optional, Tuple
 
 import msgpack
 import numpy as np
-import zstandard
 
-from . import vbyte
+from . import codec, vbyte
 from .annotation import AnnotationList
 from .featurizer import Featurizer, JsonFeaturizer
 from .gcl import Term
@@ -50,9 +49,8 @@ class StaticIndex:
                 for k, v in msgpack.unpackb(fh.read(), raw=False,
                                             strict_map_key=False).items()}
         self._postings_path = os.path.join(directory, "postings.bin")
-        dctx = zstandard.ZstdDecompressor()
         with open(os.path.join(directory, "content.bin"), "rb") as fh:
-            recs = msgpack.unpackb(dctx.decompress(fh.read()), raw=False)
+            recs = msgpack.unpackb(codec.decompress(fh.read()), raw=False)
         self._content = ContentStore()
         for a in recs:
             off = np.frombuffer(a["off"], dtype=np.int64).reshape(-1, 2)
@@ -156,9 +154,8 @@ def write_static(snapshot_like, directory: str) -> None:
                          "off": np.asarray(r.offsets, dtype=np.int64).tobytes(),
                          "tok": list(r.tokens)})
     recs.sort(key=lambda r: r["lo"])
-    cctx = zstandard.ZstdCompressor(level=6)
     with open(os.path.join(build, "content.bin"), "wb") as fh:
-        fh.write(cctx.compress(msgpack.packb(recs)))
+        fh.write(codec.compress(msgpack.packb(recs), level=6))
     with open(os.path.join(build, "meta.msgpack"), "wb") as fh:
         fh.write(msgpack.packb({"n_features": len(feats),
                                 "n_records": len(recs)}))

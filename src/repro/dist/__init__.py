@@ -1,0 +1,28 @@
+"""repro.dist — the distributed serving/training layer.
+
+  compression   int8 gradient compression with error feedback
+  checkpoint    atomic versioned checkpoints (train state + dynamic index)
+  elastic       mesh shrink / pytree reshard on device loss
+  sharding      param/batch/cache sharding policies for the meshes
+  shard_router  ShardedWarren: hash-partitioned index serving
+
+Submodules are imported lazily so that pulling in one (e.g. compression,
+jax-only) never drags the whole index stack along.
+"""
+
+import importlib
+
+_SUBMODULES = ("compression", "checkpoint", "elastic", "sharding",
+               "shard_router")
+
+__all__ = list(_SUBMODULES) + ["ShardedWarren", "CheckpointManager"]
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        return importlib.import_module(f".{name}", __name__)
+    if name == "ShardedWarren":
+        return importlib.import_module(".shard_router", __name__).ShardedWarren
+    if name == "CheckpointManager":
+        return importlib.import_module(".checkpoint", __name__).CheckpointManager
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,259 @@
+"""Atomic, versioned checkpointing for train state *and* the dynamic index.
+
+Layout (one directory per manager):
+
+  step_00000020/state.msgpack    flattened pytree leaves (raw array bytes)
+  step_00000020/MANIFEST         json: {"step", "crc", "nbytes"}
+  index_00000020.log             annotative-index snapshot in the normal
+                                 transaction-log format (Segment.to_record
+                                 frames + commit markers), so recovery is
+                                 just DynamicIndex.recover()
+
+Writes land in a tmp name and are published with an atomic rename, so a
+reader never sees a partial checkpoint.  Restores verify the manifest crc;
+``restore_latest_good`` walks backwards past corrupt/torn checkpoints to
+the newest intact one.  ``async_write=True`` serializes to host memory
+synchronously (donation-safe) and does the file I/O on a worker thread.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+import zlib
+from typing import Any, List, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+_INDEX_RE = re.compile(r"^(.+)_(\d{8})\.log$")
+
+
+class CheckpointCorrupt(RuntimeError):
+    """On-disk damage: torn write, bad crc, unreadable payload."""
+
+
+class CheckpointShapeMismatch(RuntimeError):
+    """Intact checkpoint whose structure doesn't match the restore target
+    (e.g. the model or optimizer config changed).  Deliberately NOT skipped
+    by restore_latest_good — silently restarting from step 0 is worse."""
+
+
+# ------------------------------------------------------------------ #
+# leaf serialization: raw bytes + dtype string (bf16 via ml_dtypes)
+# ------------------------------------------------------------------ #
+def _pack_leaf(leaf) -> dict:
+    if isinstance(leaf, (bool, int, float)):
+        return {"k": "py", "v": leaf}
+    arr = np.asarray(leaf)            # device -> host copy (donation-safe)
+    return {"k": "nd", "d": str(arr.dtype), "s": list(arr.shape),
+            "b": arr.tobytes()}
+
+
+def _unpack_leaf(rec: dict):
+    if rec["k"] == "py":
+        return rec["v"]
+    return np.frombuffer(rec["b"], dtype=np.dtype(rec["d"])
+                         ).reshape(rec["s"]).copy()
+
+
+def _serialize(tree) -> bytes:
+    leaves = jax.tree.leaves(tree)
+    return msgpack.packb({"n": len(leaves),
+                          "leaves": [_pack_leaf(l) for l in leaves]},
+                         use_bin_type=True)
+
+
+def _deserialize(payload: bytes, like):
+    obj = msgpack.unpackb(payload, raw=False)
+    flat, treedef = jax.tree.flatten(like)
+    if obj["n"] != len(flat):
+        raise CheckpointShapeMismatch(
+            f"checkpoint has {obj['n']} leaves, expected {len(flat)} — "
+            "did the model/optimizer config change since it was written?")
+    return treedef.unflatten([_unpack_leaf(r) for r in obj["leaves"]])
+
+
+# ------------------------------------------------------------------ #
+class CheckpointManager:
+    """Versioned save/restore with retention and latest-good recovery."""
+
+    def __init__(self, directory: str, keep: Optional[int] = 3,
+                 async_write: bool = True):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        for name in os.listdir(directory):    # torn writes from a crash
+            if ".tmp-" in name:
+                path = os.path.join(directory, name)
+                try:
+                    (shutil.rmtree if os.path.isdir(path)
+                     else os.unlink)(path)
+                except OSError:
+                    pass
+        self._fs_lock = threading.Lock()
+        self._q: Optional["queue.Queue"] = None
+        self._write_error: Optional[BaseException] = None
+        if async_write:
+            self._q = queue.Queue()
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    # -- listing ---------------------------------------------------- #
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.directory, name,
+                                                 "MANIFEST")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save -------------------------------------------------------- #
+    def save(self, step: int, tree, block: bool = False) -> None:
+        payload = _serialize(tree)      # host copy happens HERE, synchronously
+        if self._q is None:
+            self._write(step, payload)
+            return
+        self._q.put((step, payload))
+        if block:
+            self.wait()
+
+    def wait(self) -> None:
+        """Block until all queued async writes are durable.
+
+        Raises if any queued write failed — a caller that asked for a
+        durable checkpoint must not be told it has one.
+        """
+        if self._q is not None:
+            self._q.join()
+        if self._write_error is not None:
+            err, self._write_error = self._write_error, None
+            raise RuntimeError("async checkpoint write failed") from err
+
+    def _drain(self):
+        while True:
+            step, payload = self._q.get()
+            try:
+                self._write(step, payload)
+            except Exception as e:      # keep the worker alive, keep the error
+                self._write_error = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, payload: bytes) -> None:
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = f"{final}.tmp-{os.getpid()}-{threading.get_ident()}"
+        with self._fs_lock:
+            os.makedirs(tmp, exist_ok=True)
+            with open(os.path.join(tmp, "state.msgpack"), "wb") as fh:
+                fh.write(payload)
+                fh.flush()
+                os.fsync(fh.fileno())
+            manifest = {"step": step, "crc": zlib.crc32(payload),
+                        "nbytes": len(payload)}
+            with open(os.path.join(tmp, "MANIFEST"), "w") as fh:
+                json.dump(manifest, fh)
+                fh.flush()
+                os.fsync(fh.fileno())
+            shutil.rmtree(final, ignore_errors=True)
+            os.rename(tmp, final)       # atomic publish
+            self._gc()
+
+    def _gc(self) -> None:
+        if self.keep is None:
+            return
+        steps = self.all_steps()
+        for step in steps[:-self.keep] if len(steps) > self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{step:08d}"),
+                          ignore_errors=True)
+            for name in os.listdir(self.directory):
+                m = _INDEX_RE.match(name)
+                if m and int(m.group(2)) == step:
+                    os.unlink(os.path.join(self.directory, name))
+
+    # -- restore ------------------------------------------------------ #
+    def restore(self, step: int, like):
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        try:
+            with open(os.path.join(d, "MANIFEST")) as fh:
+                manifest = json.load(fh)
+            with open(os.path.join(d, "state.msgpack"), "rb") as fh:
+                payload = fh.read()
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointCorrupt(f"step {step}: {e}") from e
+        if zlib.crc32(payload) != manifest.get("crc"):
+            raise CheckpointCorrupt(f"step {step}: crc mismatch")
+        return _deserialize(payload, like)
+
+    def restore_latest_good(self, like):
+        """Newest intact checkpoint as (step, state); (None, None) if none.
+
+        Corrupt or torn checkpoints are skipped, not fatal — the pod-loss
+        recovery path must make progress off whatever survived.
+        """
+        for step in reversed(self.all_steps()):
+            try:
+                return step, self.restore(step, like)
+            except CheckpointCorrupt:
+                continue
+        return None, None
+
+    # -- the dynamic index ------------------------------------------- #
+    def save_index(self, step: int, index, name: str = "index") -> str:
+        """Snapshot a DynamicIndex as a compacted transaction log."""
+        from repro.core.log import TransactionLog
+
+        with index._publish_lock:
+            segments = index._segments
+        records = []
+        for seg in segments:
+            records.append(seg.to_record())
+            records.append({"t": "commit", "seq": seg.seqnum})
+        final = os.path.join(self.directory, f"{name}_{step:08d}.log")
+        tmp = f"{final}.tmp-{os.getpid()}"
+        log = TransactionLog(tmp)
+        for rec in records:
+            log.append(rec, sync=False)
+        log.close()
+        with self._fs_lock:
+            os.replace(tmp, final)
+        return final
+
+    def restore_index(self, step: int, name: str = "index",
+                      tokenizer=None, featurizer=None,
+                      log_path: Optional[str] = None):
+        """Rebuild a DynamicIndex from its snapshot log (or None).
+
+        The restored index logs to ``log_path`` (in-memory when None) —
+        never back into the checkpoint file itself.
+        """
+        from repro.core.index import DynamicIndex
+        from repro.core.log import TransactionLog
+
+        path = os.path.join(self.directory, f"{name}_{step:08d}.log")
+        if not os.path.exists(path):
+            return None
+        index = DynamicIndex.recover(path, tokenizer=tokenizer,
+                                     featurizer=featurizer)
+        index._log.close()
+        index._log = TransactionLog(log_path)
+        return index
+
+    def index_steps(self, name: str = "index") -> List[int]:
+        steps = []
+        for fn in os.listdir(self.directory):
+            m = _INDEX_RE.match(fn)
+            if m and m.group(1) == name:
+                steps.append(int(m.group(2)))
+        return sorted(steps)

@@ -1,0 +1,84 @@
+"""Gradient compression for cross-pod collectives: int8 quantization with
+error-feedback residuals (1-bit-Adam / EF-SGD style).
+
+Each leaf is quantized independently against its own max-abs scale:
+
+    scale = max|g + r| / 127          (one f32 per leaf)
+    q     = round((g + r) / scale)    (int8)
+    r'    = (g + r) - q * scale       (the rounding error, carried)
+
+Carrying the residual makes the compressed stream unbiased over time, so
+the *averaged* update converges even though any single step moves by at
+most one quantization step.  All ops are jit- and shard_map-safe;
+``cross_pod_reduce_compressed`` is the drop-in replacement for a plain
+``psum`` of gradients over the pod axis: quantize locally, reduce, and
+keep the quantization error on-device for the next step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residual(tree):
+    """Zero error-feedback residuals shaped like the gradient pytree."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+
+
+def _quantize_leaf(g, r):
+    x = g.astype(jnp.float32) + r
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    safe = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(x / safe), -127, 127).astype(jnp.int8)
+    new_r = x - q.astype(jnp.float32) * scale
+    return q, scale, new_r
+
+
+def compress_with_feedback(grads, residual):
+    """Quantize grads+residual; returns (int8 tree, scale tree, residual')."""
+    out = jax.tree.map(_quantize_leaf, grads, residual)
+    q = jax.tree.map(lambda o: o[0], out, is_leaf=lambda o: isinstance(o, tuple))
+    s = jax.tree.map(lambda o: o[1], out, is_leaf=lambda o: isinstance(o, tuple))
+    r = jax.tree.map(lambda o: o[2], out, is_leaf=lambda o: isinstance(o, tuple))
+    return q, s, r
+
+
+def decompress(q, scales):
+    """Dequantize an int8 tree back to f32."""
+    return jax.tree.map(lambda qi, si: qi.astype(jnp.float32) * si, q, scales)
+
+
+def compression_ratio(tree) -> float:
+    """Wire bytes of the compressed form relative to f32 (per-leaf scale)."""
+    num = sum(l.size * 1 + 4 for l in jax.tree.leaves(tree))
+    den = sum(l.size * 4 for l in jax.tree.leaves(tree))
+    return num / max(den, 1)
+
+
+def cross_pod_reduce_compressed(grads, residual, axis_name: str = "pod"):
+    """Mean-reduce gradients over ``axis_name`` with a compressed payload.
+
+    Call inside shard_map/pmap.  The scale is agreed globally first (pmax
+    of each pod's max-abs — a scalar), every pod quantizes against it, and
+    the psum moves *int16* instead of f32: half the collective bytes, with
+    headroom to sum 256 pods of int8-range values without overflow.  Error
+    feedback stays local, against the shared scale.  Returns
+    (reduced grads, residual').
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def reduce_leaf(g, r):
+        x = g.astype(jnp.float32) + r
+        scale = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name) / 127.0
+        safe = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+        q = jnp.clip(jnp.round(x / safe), -127, 127).astype(jnp.int16)
+        total = jax.lax.psum(q, axis_name)       # 2-byte payload on the wire
+        new_r = x - q.astype(jnp.float32) * scale
+        return total.astype(jnp.float32) * scale / n, new_r
+
+    out = jax.tree.map(reduce_leaf, grads, residual)
+    is_pair = lambda o: isinstance(o, tuple)
+    reduced = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+    new_res = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+    return reduced, new_res

@@ -1,0 +1,82 @@
+"""Elastic fault tolerance: repartition state when the device mesh changes.
+
+When a pod (or a slice of one) drops out, the scheduler hands back fewer
+devices.  Recovery is: pick a new mesh shape (``shrink_mesh``), rebuild the
+mesh (``launch.mesh.make_mesh_from_sizes``), restore the latest-good
+checkpoint, and move every pytree leaf onto its new sharding (``reshard``).
+Index shards are repartitioned the same way (``repartition_shards``): the
+surviving shard count changes, documents re-route by the same hash, so a
+ShardedWarren rebuilt with fewer shards serves identical results.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+
+
+def reshard(tree, shardings):
+    """Move/repartition every leaf of ``tree`` onto ``shardings``.
+
+    ``shardings`` is a matching pytree of ``jax.sharding.Sharding`` (or a
+    single sharding applied to all leaves).  jax.device_put handles
+    resharding committed arrays across meshes, including host transfers.
+    """
+    if isinstance(shardings, jax.sharding.Sharding):
+        return jax.tree.map(lambda l: jax.device_put(l, shardings), tree)
+    return jax.tree.map(lambda l, s: jax.device_put(l, s), tree, shardings)
+
+
+def shrink_mesh(sizes: Dict[str, int], lost_devices: int,
+                preserve: str = "model") -> Dict[str, int]:
+    """New mesh axis sizes after losing ``lost_devices`` devices.
+
+    Policy: tensor-parallel width (``preserve``) is never touched — param
+    layouts and compiled kernels assume it.  The largest remaining axis is
+    halved (keeping power-of-two shapes restartable from FSDP checkpoints)
+    until the mesh fits in the surviving device count.
+    """
+    new = dict(sizes)
+    total = 1
+    for v in new.values():
+        total *= v
+    budget = total - lost_devices
+    if budget < 1:
+        raise ValueError(f"lost {lost_devices} of {total} devices")
+
+    def prod():
+        p = 1
+        for v in new.values():
+            p *= v
+        return p
+
+    while prod() > budget:
+        candidates = [a for a, v in new.items() if a != preserve and v > 1]
+        if not candidates:
+            raise ValueError(
+                f"cannot shrink {sizes} into {budget} devices while "
+                f"preserving axis {preserve!r}")
+        axis = max(candidates, key=lambda a: new[a])
+        new[axis] //= 2
+    return new
+
+
+def repartition_shards(shard_docs: List[List], k_new: int,
+                       route=None) -> List[List]:
+    """Redistribute per-shard item lists onto ``k_new`` shards.
+
+    ``route(item, k) -> shard`` defaults to stable hashing of the item's
+    repr; items already on the right shard stay put (minimal movement when
+    k_new == k_old).
+    """
+    if route is None:
+        def route(item, k):
+            import hashlib
+            h = hashlib.blake2b(repr(item).encode(), digest_size=8)
+            return int.from_bytes(h.digest(), "big") % k
+    out: List[List] = [[] for _ in range(k_new)]
+    for items in shard_docs:
+        for item in items:
+            out[route(item, k_new)].append(item)
+    return out

@@ -1,0 +1,373 @@
+"""ShardedWarren: hash-partitioned serving over K dynamic index shards.
+
+Each shard is a full :class:`DynamicIndex` owning a disjoint *address
+stripe* (shard i allocates permanent addresses in [i*STRIPE, (i+1)*STRIPE)),
+so a global address names its owning shard — reads route by ``addr //
+STRIPE`` and committed cross-shard annotations just work.
+
+Write path: a ShardedWarren transaction fans out into per-shard
+transactions, opened lazily.  All *appends* of one transaction land on one
+shard (chosen by hashing the first appended document), which keeps the
+transaction's staging-address space consistent; annotations and erases on
+committed addresses route to their owners.  Commit is two-phase across the
+touched shards: ready() everywhere, then commit() everywhere — each shard's
+own transaction log provides per-shard durability.
+
+Read path: the class exposes the exact Warren surface (start/end/
+transaction/annotations/hopper/translate/phrase/…) by k-way merging
+per-shard annotation lists, so every existing caller — ``score_bm25``,
+``collection_stats``, ``RetrievalServer``, the GCL engine — runs sharded
+with zero call-site changes.  ``search`` is the scatter-gather fast path:
+global collection statistics (document counts, lengths, per-term document
+frequencies) are reduced across shards first, each shard scores its own
+documents with the *global* BM25 parameters and returns its top-k, and a
+k-way merge yields the global top-k — identical scores to a single index.
+"""
+
+from __future__ import annotations
+
+import heapq
+import os
+import re
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import ranking
+from repro.core.annotation import AnnotationList, merge_lists
+from repro.core.featurizer import Featurizer, JsonFeaturizer, murmur64a
+from repro.core.gcl import GCLNode, Phrase, Term
+from repro.core.index import DynamicIndex
+from repro.core.tokenizer import Tokenizer, Utf8Tokenizer
+from repro.core.warren import Warren
+
+STRIPE = 1 << 44          # address stripe per shard (>> any index size)
+
+
+def shard_of(addr: int) -> int:
+    """Owning shard of a committed (non-negative) address."""
+    return int(addr) // STRIPE
+
+
+def route_text(text: str, n_shards: int) -> int:
+    """Stable hash partition for appends."""
+    return int(murmur64a(text.encode()) % n_shards)
+
+
+class _ShardedIndexView:
+    """Facade matching the bits of DynamicIndex callers poke at."""
+
+    def __init__(self, shards: List[DynamicIndex], tokenizer, featurizer):
+        self._shards = shards
+        self.tokenizer = tokenizer
+        self.featurizer = featurizer
+
+    @property
+    def _segments(self) -> tuple:
+        out = []
+        for s in self._shards:
+            out.extend(s._segments)
+        return tuple(out)
+
+    def merge_segments(self, upto: Optional[int] = None) -> None:
+        for s in self._shards:
+            s.merge_segments(upto)
+
+
+class ShardedWarren:
+    """K-shard warren with the single-Warren lifecycle surface."""
+
+    def __init__(self, n_shards: int = 4,
+                 tokenizer: Optional[Tokenizer] = None,
+                 featurizer: Optional[Featurizer] = None,
+                 log_dir: Optional[str] = None,
+                 _shards: Optional[List[DynamicIndex]] = None):
+        self.tokenizer = tokenizer or Utf8Tokenizer()
+        self.featurizer = featurizer or JsonFeaturizer()
+        if _shards is not None:
+            self.shards = _shards
+        else:
+            self.shards = []
+            for i in range(n_shards):
+                path = (f"{log_dir}/shard{i:02d}.log"
+                        if log_dir is not None else None)
+                idx = DynamicIndex(self.tokenizer, self.featurizer,
+                                   log_path=path)
+                idx._next_addr = i * STRIPE
+                self.shards.append(idx)
+        self.n_shards = len(self.shards)
+        self.index = _ShardedIndexView(self.shards, self.tokenizer,
+                                       self.featurizer)
+        self._warrens = [Warren(s) for s in self.shards]
+        self._started = False
+        self._txn_open: Dict[int, Warren] = {}   # shard -> warren with txn
+        self._txn_active = False
+        self._append_shard: Optional[int] = None
+
+    # -- lifecycle ------------------------------------------------------ #
+    def clone(self) -> "ShardedWarren":
+        return ShardedWarren(tokenizer=self.tokenizer,
+                             featurizer=self.featurizer, _shards=self.shards)
+
+    def start(self) -> None:
+        if self._started:
+            raise RuntimeError("already started")
+        for w in self._warrens:
+            w.start()
+        self._started = True
+
+    def end(self) -> None:
+        for w in self._warrens:
+            w.end()
+        self._started = False
+
+    def __enter__(self) -> "ShardedWarren":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        if self._txn_active:
+            for w in self._txn_open.values():
+                if w._txn is not None and w._txn._state in ("open", "ready"):
+                    w.abort()
+            self._reset_txn()
+        self.end()
+        return False
+
+    # -- transactions ---------------------------------------------------- #
+    def transaction(self) -> None:
+        self._require_started()
+        if self._txn_active:
+            raise RuntimeError("transaction already active on this warren")
+        self._txn_active = True
+
+    def _reset_txn(self) -> None:
+        self._txn_open = {}
+        self._txn_active = False
+        self._append_shard = None
+
+    def _txn_warren(self, shard: int) -> Warren:
+        if not self._txn_active:
+            raise RuntimeError("no active transaction")
+        w = self._txn_open.get(shard)
+        if w is None:
+            w = self._warrens[shard]
+            w.transaction()
+            self._txn_open[shard] = w
+        return w
+
+    def _route_addr(self, p: int) -> int:
+        if p < 0:                      # staging address -> the append shard
+            if self._append_shard is None:
+                raise RuntimeError("staging address with no appends")
+            return self._append_shard
+        return shard_of(p)
+
+    def append(self, text: str) -> Tuple[int, int]:
+        if self._append_shard is None:
+            self._append_shard = route_text(text, self.n_shards)
+        return self._txn_warren(self._append_shard).append(text)
+
+    def annotate(self, feature, p: int, q: int, v: float = 0.0,
+                 v_is_address: bool = False) -> None:
+        shard = self._route_addr(p)
+        if v_is_address and v < 0 and shard != self._append_shard:
+            raise ValueError("staging-valued annotation on a foreign shard")
+        self._txn_warren(shard).annotate(feature, p, q, v,
+                                         v_is_address=v_is_address)
+
+    def erase(self, p: int, q: int) -> None:
+        self._txn_warren(self._route_addr(p)).erase(p, q)
+
+    def ready(self) -> None:
+        for w in self._txn_open.values():
+            w.ready()
+
+    def commit(self):
+        """Two-phase commit across every shard this transaction touched."""
+        if not self._txn_active:
+            raise RuntimeError("no active transaction")
+        opened = list(self._txn_open.values())
+        try:
+            for w in opened:                   # phase 1: all durable-ready
+                if w._txn is not None and w._txn._state == "open":
+                    w.ready()
+        except Exception:
+            self.abort()                       # nothing published yet
+            raise
+        append_w = (self._txn_open.get(self._append_shard)
+                    if self._append_shard is not None else None)
+        append_remap = None
+        failed = None
+        for w in opened:                       # phase 2: publish
+            try:
+                remap = w.commit()
+            except Exception as e:             # keep going: every shard's
+                failed = failed or e           # ready record is durable, so
+                continue                       # recovery can replay it
+            if w is append_w:
+                append_remap = remap
+        self._reset_txn()
+        if failed is not None:
+            raise RuntimeError(
+                "partial cross-shard commit: some shards published, the "
+                "rest are recoverable from their ready records") from failed
+        return append_remap if append_remap is not None else (lambda a: a)
+
+    def abort(self) -> None:
+        if not self._txn_active:
+            raise RuntimeError("no active transaction")
+        for w in self._txn_open.values():
+            w.abort()
+        self._reset_txn()
+
+    # -- reads (merged across shards) ------------------------------------- #
+    def featurize(self, feature: str) -> int:
+        return self.featurizer.featurize(feature)
+
+    def annotations(self, feature) -> AnnotationList:
+        self._require_started()
+        fval = feature if isinstance(feature, int) else self.featurize(feature)
+        return merge_lists([w.annotations(fval) for w in self._warrens])
+
+    def hopper(self, feature) -> Term:
+        return Term(self.annotations(feature))
+
+    def translate(self, p: int, q: int) -> Optional[str]:
+        self._require_started()
+        return self._warrens[shard_of(p)].translate(p, q)
+
+    def tokens(self, p: int, q: int) -> Optional[List[str]]:
+        self._require_started()
+        return self._warrens[shard_of(p)].tokens(p, q)
+
+    def phrase(self, text: str) -> GCLNode:
+        self._require_started()
+        words = self.tokenizer.split(text)
+        terms = [self.hopper(w) for w in words]
+        if not terms:
+            return Term(AnnotationList.empty())
+        return terms[0] if len(terms) == 1 else Phrase(terms)
+
+    # -- scatter-gather serving ------------------------------------------- #
+    def global_stats(self) -> ranking.CollectionStats:
+        """Cross-shard collection statistics (one pass, reduced)."""
+        self._require_started()
+        per = [ranking.collection_stats(w) for w in self._warrens]
+        n_docs = sum(s.n_docs for s in per)
+        total_len = sum(float(s.doc_lens.sum()) for s in per)
+        avgdl = total_len / n_docs if n_docs else 1.0
+        return ranking.CollectionStats(
+            n_docs, avgdl,
+            np.concatenate([s.doc_starts for s in per]),
+            np.concatenate([s.doc_ends for s in per]),
+            np.concatenate([s.doc_lens for s in per]))
+
+    def search(self, query: str, k: int = 10, k1: float = 0.9,
+               b: float = 0.4) -> List[Tuple[int, float]]:
+        """Scatter-gather BM25: per-shard top-k + global k-way merge.
+
+        Global document frequencies and avgdl make per-shard scores exactly
+        the single-index scores, so the merged top-k is exact.
+        """
+        self._require_started()
+        per = [ranking.collection_stats(w) for w in self._warrens]
+        n_docs = sum(s.n_docs for s in per)
+        if n_docs == 0:
+            return []
+        total_len = sum(float(s.doc_lens.sum()) for s in per)
+        avgdl = total_len / n_docs
+        terms = list(dict.fromkeys(ranking.ranking_tokens(query)))
+        fvals = [ranking.TF_PREFIX + ranking.porter_stem(t) for t in terms]
+        # scatter 1: per-shard term lists; reduce document frequencies
+        lists = [[w.annotations(f) for f in fvals] for w in self._warrens]
+        dfs = [sum(len(lists[si][ti]) for si in range(self.n_shards))
+               for ti in range(len(terms))]
+        # scatter 2: score each shard with the GLOBAL idf/avgdl
+        per_shard_topk: List[List[Tuple[float, int]]] = []
+        for si, stats in enumerate(per):
+            if stats.n_docs == 0:
+                per_shard_topk.append([])
+                continue
+            local = ranking.CollectionStats(stats.n_docs, avgdl,
+                                            stats.doc_starts, stats.doc_ends,
+                                            stats.doc_lens)
+            acc = np.zeros(stats.n_docs)
+            for ti in range(len(terms)):
+                lst = lists[si][ti]
+                if len(lst) == 0 or dfs[ti] == 0:
+                    continue
+                idf = ranking._bm25_idf(n_docs, dfs[ti])
+                di, imp = ranking._impacts(lst, local, idf, k1, b)
+                np.add.at(acc, di, imp)
+            kk = min(k, stats.n_docs)
+            top = np.argpartition(-acc, kk - 1)[:kk]
+            top = top[np.argsort(-acc[top], kind="stable")]
+            per_shard_topk.append(
+                [(float(acc[i]), int(stats.doc_starts[i]))
+                 for i in top if acc[i] > 0])
+        # gather: k-way merge of per-shard results
+        merged = heapq.merge(*per_shard_topk, key=lambda t: -t[0])
+        return [(d, s) for s, d in list(merged)[:k]]
+
+    def search_gcl(self, query_text: str, limit: int = 1000) -> List:
+        """Scatter-gather structural query: solve per shard, concatenate.
+
+        Exact when query solutions don't cross shard stripes — true for any
+        query over intra-document structure, since a document lives wholly
+        inside one shard.
+        """
+        from repro.core.query import solve
+        self._require_started()
+        out = []
+        for w in self._warrens:
+            out.extend(solve(query_text, w, limit=limit))
+        out.sort()
+        return out[:limit]
+
+    # -- fault tolerance --------------------------------------------------- #
+    def checkpoint(self, manager, step: int) -> None:
+        """Snapshot every shard through a CheckpointManager."""
+        for i, idx in enumerate(self.shards):
+            manager.save_index(step, idx, name=f"shard{i:02d}")
+
+    @staticmethod
+    def restore(manager, step: int, tokenizer: Optional[Tokenizer] = None,
+                featurizer: Optional[Featurizer] = None) -> "ShardedWarren":
+        """Rebuild from per-shard snapshot logs at ``step``.
+
+        A gap in the shard set (a torn multi-shard checkpoint) is an error,
+        never a silent truncation — addresses route by shard number, so a
+        missing middle shard would corrupt routing for every later shard.
+        """
+        from repro.dist.checkpoint import CheckpointCorrupt
+
+        present = set()
+        for fn in os.listdir(manager.directory):
+            m = re.match(r"^shard(\d+)_(\d{8})\.log$", fn)
+            if m and int(m.group(2)) == step:
+                present.add(int(m.group(1)))
+        if not present:
+            raise FileNotFoundError(f"no shard snapshots at step {step}")
+        missing = set(range(max(present) + 1)) - present
+        if missing:
+            raise CheckpointCorrupt(
+                f"step {step} is missing shard snapshots {sorted(missing)} "
+                f"of {max(present) + 1}")
+        tokenizer = tokenizer or Utf8Tokenizer()
+        featurizer = featurizer or JsonFeaturizer()
+        shards: List[DynamicIndex] = []
+        for i in sorted(present):
+            idx = manager.restore_index(step, name=f"shard{i:02d}",
+                                        tokenizer=tokenizer,
+                                        featurizer=featurizer)
+            idx._next_addr = max(idx._next_addr, i * STRIPE)
+            shards.append(idx)
+        return ShardedWarren(tokenizer=tokenizer, featurizer=featurizer,
+                             _shards=shards)
+
+    # -- internals --------------------------------------------------------- #
+    def _require_started(self) -> None:
+        if not self._started:
+            raise RuntimeError("warren access outside start()/end()")

@@ -1,0 +1,89 @@
+"""Sharding policies for the production meshes (used by launch/dryrun).
+
+The policy is divisibility-driven rather than name-driven so it covers all
+three families (LM / GNN / recsys) and every mesh in ``launch/mesh.py``:
+each axis group ("model" first, then the data axes under FSDP) is greedily
+assigned to the largest not-yet-sharded dimension it divides evenly.  That
+yields Megatron-style layouts on the LM stacks (vocab- or ff-sharded
+matmuls) and row-sharded embedding tables on recsys, while odd-shaped
+leaves (norm vectors, biases) fall back to replication on that axis.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Every mesh axis except the tensor-parallel one ("model")."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def leaf_sharding(mesh: Mesh, leaf, groups) -> NamedSharding:
+    """Greedy assignment of axis groups to divisible dims (largest first)."""
+    shape = tuple(getattr(leaf, "shape", ()))
+    spec = [None] * len(shape)
+    for axes in groups:
+        size = _axes_size(mesh, axes)
+        if size <= 1:
+            continue
+        best = None
+        for d in range(len(shape)):
+            if spec[d] is None and shape[d] > 0 and shape[d] % size == 0:
+                if best is None or shape[d] > shape[best]:
+                    best = d
+        if best is not None:
+            spec[best] = axes if len(axes) > 1 else axes[0]
+    return NamedSharding(mesh, P(*spec))
+
+
+def _tree_sharding(mesh: Mesh, params, groups):
+    return jax.tree.map(lambda l: leaf_sharding(mesh, l, groups), params)
+
+
+# -- per-family policies ------------------------------------------------ #
+def lm_param_sharding(mesh: Mesh, params, fsdp: bool = False):
+    groups = [("model",)] + ([data_axes(mesh)] if fsdp else [])
+    return _tree_sharding(mesh, params, groups)
+
+
+def gnn_param_sharding(mesh: Mesh, params):
+    return _tree_sharding(mesh, params, [("model",)])
+
+
+def recsys_param_sharding(mesh: Mesh, params):
+    # embedding tables are the big leaves -> row-sharded over "model"
+    return _tree_sharding(mesh, params, [("model",)])
+
+
+def recsys_batch_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P(data_axes(mesh)))
+
+
+def opt_state_sharding(param_sharding):
+    """AdamW moments follow the params; the step counter is replicated."""
+    mesh = jax.tree.leaves(param_sharding)[0].mesh
+    return {"mu": param_sharding, "nu": param_sharding,
+            "step": NamedSharding(mesh, P())}
+
+
+def lm_cache_sharding(mesh: Mesh, batch: int, long_context: bool = False):
+    """KV cache [L, B, S, Hkv, Dh]: batch-sharded normally; for batch-1
+    long-context decode the *sequence* dim is sharded instead (the 500k
+    cell's sequence-sharded KV)."""
+    dp = data_axes(mesh)
+    if long_context or batch % _axes_size(mesh, dp) != 0:
+        kv = NamedSharding(mesh, P(None, None, dp, None, None))
+        length = NamedSharding(mesh, P())
+    else:
+        kv = NamedSharding(mesh, P(None, dp, None, None, None))
+        length = NamedSharding(mesh, P(dp))
+    return {"k": kv, "v": kv, "length": length}

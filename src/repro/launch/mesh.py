@@ -20,3 +20,10 @@ def make_local_mesh(model_parallel: int = 1):
     n = len(jax.devices())
     mp = min(model_parallel, n)
     return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def make_mesh_from_sizes(sizes):
+    """Mesh from an {axis: size} dict (the elastic-restart path: feed it
+    the output of ``repro.dist.elastic.shrink_mesh`` after device loss)."""
+    axes = tuple(sizes)
+    return jax.make_mesh(tuple(sizes[a] for a in axes), axes)

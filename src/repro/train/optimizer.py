@@ -32,11 +32,16 @@ def lr_schedule(cfg: AdamWConfig, step):
     return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, decay)
 
 
-def init_opt_state(params):
+def init_opt_state(params, compress_grads: bool = False):
     zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
-    return {"mu": zeros,
-            "nu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
-            "step": jnp.zeros((), jnp.int32)}
+    state = {"mu": zeros,
+             "nu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                params),
+             "step": jnp.zeros((), jnp.int32)}
+    if compress_grads:
+        from repro.dist import compression
+        state["ef"] = compression.init_residual(params)
+    return state
 
 
 def global_norm(tree):
@@ -72,14 +77,36 @@ def adamw_update(cfg: AdamWConfig, params, grads, state):
         "grad_norm": gn, "lr": lr}
 
 
-def make_train_step(loss_fn: Callable, opt_cfg: Optional[AdamWConfig] = None):
-    """loss_fn(params, batch) -> scalar; returns jit-able full train step."""
+def make_train_step(loss_fn: Callable, opt_cfg: Optional[AdamWConfig] = None,
+                    compress_grads: bool = False,
+                    reduce_axis: Optional[str] = None):
+    """loss_fn(params, batch) -> scalar; returns jit-able full train step.
+
+    ``compress_grads`` passes gradients through int8 error-feedback
+    quantization (the cross-pod wire format) before the AdamW update; the
+    residual rides in ``opt_state["ef"]`` (see ``init_opt_state``).  Inside
+    shard_map, ``reduce_axis`` additionally mean-reduces the compressed
+    gradients over that mesh axis.
+    """
     opt_cfg = opt_cfg or AdamWConfig()
+    if compress_grads:
+        from repro.dist import compression
 
     def step(params, opt_state, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if compress_grads:
+            ef = opt_state["ef"]
+            if reduce_axis is not None:
+                grads, new_ef = compression.cross_pod_reduce_compressed(
+                    grads, ef, axis_name=reduce_axis)
+            else:
+                q, s, new_ef = compression.compress_with_feedback(grads, ef)
+                grads = compression.decompress(q, s)
+            opt_state = {k: v for k, v in opt_state.items() if k != "ef"}
         params, opt_state, metrics = adamw_update(opt_cfg, params, grads,
                                                   opt_state)
+        if compress_grads:
+            opt_state["ef"] = new_ef
         metrics["loss"] = loss
         return params, opt_state, metrics
 

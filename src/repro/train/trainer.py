@@ -38,6 +38,7 @@ class TrainerConfig:
     opt: AdamWConfig = field(default_factory=AdamWConfig)
     straggler_timeout_s: float = 5.0
     prefetch: int = 2
+    compress_grads: bool = False   # int8 error-feedback gradient compression
 
 
 class _Prefetcher:
@@ -72,9 +73,12 @@ class Trainer:
                  data_restore_fn: Callable = None, step_fn=None):
         self.cfg = cfg
         self.params = params
-        self.opt_state = init_opt_state(params)
-        self.step_fn = step_fn or jax.jit(make_train_step(loss_fn, cfg.opt),
-                                          donate_argnums=(0, 1))
+        self.opt_state = init_opt_state(params,
+                                        compress_grads=cfg.compress_grads)
+        self.step_fn = step_fn or jax.jit(
+            make_train_step(loss_fn, cfg.opt,
+                            compress_grads=cfg.compress_grads),
+            donate_argnums=(0, 1))
         self.data_iter = data_iter
         self.data_state_fn = data_state_fn or (lambda: {})
         self.data_restore_fn = data_restore_fn or (lambda s: None)
@@ -88,12 +92,13 @@ class Trainer:
     def maybe_restore(self) -> bool:
         if self.ckpt is None:
             return False
-        latest = self.ckpt.latest_step()
-        if latest is None:
-            return False
         like = {"params": self.params, "opt": self.opt_state,
                 "step": 0, "data": self.data_state_fn()}
-        state = self.ckpt.restore(latest, like)
+        # corruption-tolerant: walk back past torn checkpoints to the
+        # newest intact one (dist.checkpoint verifies the manifest crc)
+        _, state = self.ckpt.restore_latest_good(like)
+        if state is None:
+            return False
         self.params = state["params"]
         self.opt_state = state["opt"]
         self.step = int(state["step"])
@@ -101,7 +106,11 @@ class Trainer:
         return True
 
     def _save(self, block=False):
-        if self.ckpt is None or getattr(self, "_last_saved", -1) == self.step:
+        if self.ckpt is None:
+            return
+        if getattr(self, "_last_saved", -1) == self.step:
+            if block:
+                self.ckpt.wait()   # already queued async: make it durable
             return
         self._last_saved = self.step
         # data state must reflect batches *consumed*, not prefetched: prefer
