@@ -21,10 +21,11 @@ from repro.data.synth import doc_generator
 
 
 def run(n_years: int = 3, files_per_year: int = 6, docs_per_file: int = 20,
-        n_queries: int = 12, n_writers: int = 4, shards: int = 1):
-    if shards > 1:
+        n_queries: int = 12, n_writers: int = 4, shards: int = 1,
+        replicas: int = 1):
+    if shards > 1 or replicas > 1:
         from repro.dist.shard_router import ShardedWarren
-        warren = ShardedWarren(n_shards=shards)
+        warren = ShardedWarren(n_shards=shards, replicas=replicas)
     else:
         warren = Warren(DynamicIndex())
     rng = np.random.default_rng(0)
@@ -161,7 +162,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--shards", type=int, default=1,
                     help="partition the index over N shards (ShardedWarren)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replicas per shard group (quorum commits)")
     ap.add_argument("--years", type=int, default=3)
     ap.add_argument("--writers", type=int, default=4)
     args = ap.parse_args()
-    run(n_years=args.years, n_writers=args.writers, shards=args.shards)
+    run(n_years=args.years, n_writers=args.writers, shards=args.shards,
+        replicas=args.replicas)

@@ -29,11 +29,14 @@ def main():
     ap.add_argument("--docs", type=int, default=2000)
     ap.add_argument("--shards", type=int, default=1,
                     help="serve from N hash-partitioned index shards")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replicas per shard group (quorum commits, "
+                         "read failover)")
     args = ap.parse_args()
 
-    if args.shards > 1:
+    if args.shards > 1 or args.replicas > 1:
         from repro.dist.shard_router import ShardedWarren
-        warren = ShardedWarren(n_shards=args.shards)
+        warren = ShardedWarren(n_shards=args.shards, replicas=args.replicas)
     else:
         warren = Warren(DynamicIndex())
     t0 = time.time()
@@ -89,6 +92,20 @@ def main():
     print(f"top-10 agreement host/device: "
           f"{len(host_top & dev_top)}/10, host/kernel: "
           f"{len(host_top & kern_top)}/10")
+    # replica failover: kill one replica of every group, answers unchanged
+    if args.replicas > 1:
+        with warren:
+            before = warren.search(queries[0], k=10)
+        for g in range(warren.n_shards):
+            warren.mark_failed(g, g % args.replicas)
+        with warren:
+            after = warren.search(queries[0], k=10)
+        same = [round(s, 9) for _, s in before] == \
+               [round(s, 9) for _, s in after]
+        print(f"failover (1 replica/group killed): scores identical={same}")
+        for g in range(warren.n_shards):
+            warren.resurrect(g, g % args.replicas)
+
     print(f"host engine      : {1e3 * t_host / len(queries):7.2f} ms/query")
     print(f"batched device   : {1e3 * t_dev / len(queries):7.2f} ms/query "
           f"(includes jit)")

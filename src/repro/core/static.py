@@ -49,6 +49,12 @@ class StaticIndex:
                 for k, v in msgpack.unpackb(fh.read(), raw=False,
                                             strict_map_key=False).items()}
         self._postings_path = os.path.join(directory, "postings.bin")
+        # erased intervals (absent in legacy directories: nothing erased)
+        n_er = self.meta.get("er_n", 0)
+        self._erased = AnnotationList(
+            vbyte.decode_gaps(self.meta.get("er_s", b""), n_er),
+            vbyte.decode_gaps(self.meta.get("er_e", b""), n_er),
+            np.zeros(n_er), _checked=True)
         with open(os.path.join(directory, "content.bin"), "rb") as fh:
             recs = msgpack.unpackb(codec.decompress(fh.read()), raw=False)
         self._content = ContentStore()
@@ -90,10 +96,21 @@ class StaticIndex:
     def hopper(self, feature) -> Term:
         return Term(self.annotations(feature))
 
+    def _erased_overlaps(self, p: int, q: int) -> bool:
+        er = self._erased
+        if len(er) == 0:
+            return False
+        i = int(np.searchsorted(er.ends, p, side="left"))
+        return i < len(er) and int(er.starts[i]) <= q
+
     def translate(self, p: int, q: int) -> Optional[str]:
+        if self._erased_overlaps(p, q):
+            return None
         return self._content.translate(p, q)
 
     def tokens(self, p: int, q: int) -> Optional[List[str]]:
+        if self._erased_overlaps(p, q):
+            return None
         return self._content.tokens(p, q)
 
     # warren-compat helpers
@@ -147,9 +164,17 @@ def write_static(snapshot_like, directory: str) -> None:
             pos += len(blob)
     with open(os.path.join(build, "features.msgpack"), "wb") as fh:
         fh.write(msgpack.packb({str(k): list(v) for k, v in offsets.items()}))
+    erased = snap.erased
     recs = []
     for seg in snap.segments:
         for r in seg.content.records():
+            # GC content of fully-erased records; partially-erased spans are
+            # hidden at read time by the persisted erased list below
+            if len(erased):
+                i = int(np.searchsorted(erased.starts, r.lo,
+                                        side="right")) - 1
+                if i >= 0 and int(erased.ends[i]) >= r.hi:
+                    continue
             recs.append({"lo": r.lo, "hi": r.hi, "text": r.text,
                          "off": np.asarray(r.offsets, dtype=np.int64).tobytes(),
                          "tok": list(r.tokens)})
@@ -158,7 +183,10 @@ def write_static(snapshot_like, directory: str) -> None:
         fh.write(codec.compress(msgpack.packb(recs), level=6))
     with open(os.path.join(build, "meta.msgpack"), "wb") as fh:
         fh.write(msgpack.packb({"n_features": len(feats),
-                                "n_records": len(recs)}))
+                                "n_records": len(recs),
+                                "er_n": len(erased),
+                                "er_s": vbyte.encode_gaps(erased.starts),
+                                "er_e": vbyte.encode_gaps(erased.ends)}))
     if os.path.exists(directory):
         import shutil
         shutil.rmtree(directory + ".old", ignore_errors=True)

@@ -250,6 +250,47 @@ class CheckpointManager:
         index._log = TransactionLog(log_path)
         return index
 
+    def restore_index_replicas(self, step: int, name: str = "index",
+                               n: int = 1, tokenizer=None, featurizer=None,
+                               log_path: Optional[str] = None) -> List:
+        """Fan one index snapshot out to ``n`` independent replicas.
+
+        The snapshot log is recovered from disk once; siblings are deep
+        copies through the durable segment form (``Segment.to_record`` /
+        ``from_record``), so every replica owns its segments and content
+        stores — no shared mutable state, and no repeated log replay.
+        Raises FileNotFoundError when the snapshot is absent: a replicated
+        restore must not silently hand back an empty group.
+
+        ``log_path`` names the transaction log of the FIRST replica only
+        and is rejected for n > 1 — replicas sharing one append log would
+        interleave duplicate-seqnum frames and double-replay on recovery;
+        give each sibling its own log after restore instead.
+        """
+        from repro.core.index import DynamicIndex, Segment
+
+        if log_path is not None and n > 1:
+            raise ValueError(
+                "log_path with n > 1 would share one transaction log "
+                "across replicas; attach per-replica logs after restore")
+        first = self.restore_index(step, name=name, tokenizer=tokenizer,
+                                   featurizer=featurizer, log_path=log_path)
+        if first is None:
+            raise FileNotFoundError(
+                f"no index snapshot {name!r} at step {step} "
+                f"in {self.directory}")
+        replicas = [first]
+        for _ in range(max(1, n) - 1):
+            idx = DynamicIndex(first.tokenizer, first.featurizer,
+                               log_path=None)
+            idx._segments = tuple(Segment.from_record(s.to_record())
+                                  for s in first._segments)
+            idx._version = 1
+            idx._next_addr = first._next_addr
+            idx._next_seq = first._next_seq
+            replicas.append(idx)
+        return replicas
+
     def index_steps(self, name: str = "index") -> List[int]:
         steps = []
         for fn in os.listdir(self.directory):

@@ -80,3 +80,24 @@ def repartition_shards(shard_docs: List[List], k_new: int,
         for item in items:
             out[route(item, k_new)].append(item)
     return out
+
+
+def repartition_replica_groups(group_docs: List[List], k_new: int,
+                               replicas: int = 1,
+                               route=None) -> List[List[List]]:
+    """Repartition *whole replica groups* onto ``k_new`` logical shards.
+
+    ``group_docs`` holds one item list per current shard group (replicas of
+    a group are lockstep-identical, so one list describes the whole group).
+    Items are re-routed with the same stable hash as ``repartition_shards``,
+    then every new group's list is fanned out to ``replicas`` copies —
+    replicas always move together, a group is never split across shards.
+
+    Returns ``k_new`` groups, each a list of ``replicas`` identical item
+    lists (independent list objects, matching the independent per-replica
+    indexes they describe).
+    """
+    if replicas < 1:
+        raise ValueError("replicas must be >= 1")
+    flat = repartition_shards(group_docs, k_new, route)
+    return [[list(items) for _ in range(replicas)] for items in flat]

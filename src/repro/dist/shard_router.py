@@ -1,27 +1,44 @@
-"""ShardedWarren: hash-partitioned serving over K dynamic index shards.
+"""ShardedWarren: hash-partitioned, replicated serving over K shard groups.
 
-Each shard is a full :class:`DynamicIndex` owning a disjoint *address
-stripe* (shard i allocates permanent addresses in [i*STRIPE, (i+1)*STRIPE)),
-so a global address names its owning shard — reads route by ``addr //
+Each *logical shard* is a :class:`ReplicaGroup` of R lockstep
+:class:`DynamicIndex` replicas, all owning the same disjoint *address
+stripe* (group g allocates permanent addresses in [g*STRIPE, (g+1)*STRIPE)),
+so a global address names its owning group — reads route by ``addr //
 STRIPE`` and committed cross-shard annotations just work.
 
-Write path: a ShardedWarren transaction fans out into per-shard
-transactions, opened lazily.  All *appends* of one transaction land on one
-shard (chosen by hashing the first appended document), which keeps the
+Write path: a ShardedWarren transaction fans out into per-group
+transactions, opened lazily; inside a group every live replica stages the
+same operations, so deterministic transaction building keeps replicas in
+address lockstep.  All *appends* of one transaction land on one group
+(chosen by hashing the first appended document), which keeps the
 transaction's staging-address space consistent; annotations and erases on
-committed addresses route to their owners.  Commit is two-phase across the
-touched shards: ready() everywhere, then commit() everywhere — each shard's
-own transaction log provides per-shard durability.
+committed addresses route to their owners.  Commit is a two-phase *quorum*
+commit across the touched groups: phase 1 durably readies the transaction
+on every live replica of every group, holding each group's write lock in
+ascending group order (no deadlocks, and a replica can never be resurrected
+mid-window) — if any group readies fewer than ⌈(R+1)/2⌉ replicas the whole
+cross-shard transaction aborts cleanly (:class:`QuorumError`); phase 2
+publishes on every readied replica that is still live.  A replica whose
+ready/commit raises is failed in place (fail-stop) so the survivors stay
+consistent.
 
 Read path: the class exposes the exact Warren surface (start/end/
 transaction/annotations/hopper/translate/phrase/…) by k-way merging
-per-shard annotation lists, so every existing caller — ``score_bm25``,
-``collection_stats``, ``RetrievalServer``, the GCL engine — runs sharded
-with zero call-site changes.  ``search`` is the scatter-gather fast path:
-global collection statistics (document counts, lengths, per-term document
-frequencies) are reduced across shards first, each shard scores its own
-documents with the *global* BM25 parameters and returns its top-k, and a
-k-way merge yields the global top-k — identical scores to a single index.
+per-group annotation lists served from the *first live replica* of each
+group, with automatic failover to a sibling when a replica is marked failed
+(or raises :class:`ReplicaFailure`).  Sessions get *monotonic reads*: each
+clone tracks the highest segment seqnum it has served per group, and a
+failover target must have caught up to it — since per-group commits are
+serialized, a mid-publish failover can never un-see a committed
+transaction.  ``search`` is the scatter-gather fast
+path: global collection statistics are reduced first, each group scores its
+own documents with the *global* BM25 parameters, and a k-way merge yields
+the global top-k — identical scores to a single index even with R-1
+replicas of every group dead.
+
+Failed replicas re-join via ``resurrect``: the lagging replica's state is
+rebuilt by streaming the durable segment form (``Segment.to_record``) from
+a healthy sibling under the group write lock, restoring address lockstep.
 """
 
 from __future__ import annotations
@@ -30,7 +47,8 @@ import heapq
 import os
 import re
 import threading
-from typing import Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -38,15 +56,15 @@ from repro.core import ranking
 from repro.core.annotation import AnnotationList, merge_lists
 from repro.core.featurizer import Featurizer, JsonFeaturizer, murmur64a
 from repro.core.gcl import GCLNode, Phrase, Term
-from repro.core.index import DynamicIndex
+from repro.core.index import DynamicIndex, Segment, Transaction
 from repro.core.tokenizer import Tokenizer, Utf8Tokenizer
 from repro.core.warren import Warren
 
-STRIPE = 1 << 44          # address stripe per shard (>> any index size)
+STRIPE = 1 << 44          # address stripe per shard group (>> any index size)
 
 
 def shard_of(addr: int) -> int:
-    """Owning shard of a committed (non-negative) address."""
+    """Owning shard group of a committed (non-negative) address."""
     return int(addr) // STRIPE
 
 
@@ -55,71 +73,341 @@ def route_text(text: str, n_shards: int) -> int:
     return int(murmur64a(text.encode()) % n_shards)
 
 
+class ReplicaFailure(RuntimeError):
+    """A replica cannot serve; readers fail over, writers fail it in place."""
+
+
+class QuorumError(RuntimeError):
+    """Phase 1 readied fewer than ⌈(R+1)/2⌉ replicas of some group; the
+    whole cross-shard transaction was aborted cleanly (nothing published)."""
+
+
+# --------------------------------------------------------------------- #
+class ReplicaGroup:
+    """R lockstep DynamicIndex replicas of one logical shard.
+
+    ``alive`` is the fail-stop health vector shared by every clone of the
+    owning ShardedWarren.  ``write_lock`` serializes phase-1+2 of quorum
+    commits against each other and against ``resurrect`` — readers never
+    take it.
+    """
+
+    def __init__(self, group_id: int, replicas: List[DynamicIndex]):
+        self.group_id = group_id
+        self.replicas = replicas
+        self.alive = [True] * len(replicas)
+        self.write_lock = threading.RLock()
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def quorum(self) -> int:
+        """⌈(R+1)/2⌉: a strict majority of the group."""
+        return len(self.replicas) // 2 + 1
+
+    def live(self) -> List[int]:
+        return [r for r, a in enumerate(self.alive) if a]
+
+    def first_alive(self) -> int:
+        for r, a in enumerate(self.alive):
+            if a:
+                return r
+        raise ReplicaFailure(
+            f"shard group {self.group_id}: no live replica")
+
+    def mark_failed(self, replica: int) -> None:
+        self.alive[replica] = False
+
+    def resurrect(self, replica: int) -> None:
+        """Re-join a failed replica by streaming segments from a healthy
+        sibling (durable ``Segment.to_record`` form), restoring lockstep."""
+        with self.write_lock:
+            if self.alive[replica]:
+                return
+            src = self.replicas[self.first_alive()]
+            dst = self.replicas[replica]
+            with src._publish_lock:
+                segments = src._segments
+                next_addr, next_seq = src._next_addr, src._next_seq
+            copies = tuple(Segment.from_record(s.to_record())
+                           for s in segments)
+            with dst._publish_lock:
+                dst._segments = copies
+                dst._version += 1
+                dst._next_addr = next_addr
+                dst._next_seq = next_seq
+                dst._trim_cache()
+            self.alive[replica] = True
+
+
+class _GroupTxn:
+    """One logical-shard transaction fanned out onto live replicas.
+
+    Staging is per-replica (negative addresses, no side effects until
+    ready), so replicas that die mid-transaction are simply skipped and
+    replicas resurrected mid-transaction catch up by replaying the staged
+    operation list at phase 1 — both without breaking lockstep.
+    """
+
+    def __init__(self, group: ReplicaGroup):
+        self.group = group
+        self.txns: Dict[int, Transaction] = {}
+        self.ops: List[Tuple] = []       # replay log for late joiners
+        for r in group.live():
+            self.txns[r] = group.replicas[r].transaction()
+        if not self.txns:
+            raise ReplicaFailure(
+                f"shard group {group.group_id}: no live replica for writes")
+
+    # -- staged operations (fan out to live replicas) -------------------- #
+    def _apply(self, op: Tuple, txn: Transaction):
+        kind = op[0]
+        if kind == "append":
+            return txn.append(op[1])
+        if kind == "annotate":
+            return txn.annotate(*op[1:])
+        return txn.erase(*op[1:])
+
+    def _fan_out(self, op: Tuple):
+        self.ops.append(op)
+        out = None
+        for r in list(self.txns):
+            if not self.group.alive[r]:
+                # the replica missed this op: discard its staging so a
+                # resurrected replica rebuilds via the phase-1 replay
+                # instead of readying a torn partial transaction
+                self.txns.pop(r).abort()
+                continue
+            res = self._apply(op, self.txns[r])
+            if out is None:
+                out = res
+        if out is None and op[0] == "append":
+            raise ReplicaFailure(
+                f"shard group {self.group.group_id}: no live replica")
+        return out
+
+    def append(self, text: str) -> Tuple[int, int]:
+        return self._fan_out(("append", text))
+
+    def annotate(self, feature, p: int, q: int, v: float,
+                 v_is_address: bool) -> None:
+        self._fan_out(("annotate", feature, p, q, v, v_is_address))
+
+    def erase(self, p: int, q: int) -> None:
+        self._fan_out(("erase", p, q))
+
+    # -- two-phase quorum commit ------------------------------------------ #
+    def quorum_ready(self, hook: Optional[Callable] = None) -> int:
+        """Phase 1 on this group; returns the number of readied replicas.
+
+        Caller holds ``group.write_lock``.  Replicas resurrected since the
+        transaction opened get the staged ops replayed first; replicas
+        whose ready() raises are failed in place so the address space of
+        the surviving replicas stays in lockstep.
+        """
+        for r in self.group.live():          # late joiners (resurrected)
+            if r not in self.txns:
+                txn = self.group.replicas[r].transaction()
+                try:
+                    for op in self.ops:
+                        self._apply(op, txn)
+                except Exception:
+                    self.group.mark_failed(r)
+                    continue
+                self.txns[r] = txn
+        ready = 0
+        for r, txn in self.txns.items():
+            if not self.group.alive[r]:
+                continue
+            if hook is not None:
+                hook(self.group.group_id, r)
+            if not self.group.alive[r]:      # the hook may have killed it
+                continue
+            try:
+                if txn._state == "open":
+                    txn.ready()
+                if txn._state == "ready":
+                    ready += 1
+            except Exception:
+                self.group.mark_failed(r)
+        return ready
+
+    def commit_live(self):
+        """Phase 2: publish on every live, readied replica.
+
+        Returns (remap, error): the staging→permanent remap of the first
+        replica that published (they are identical by lockstep), or
+        (None, err) when no replica could publish.
+        """
+        remap, err = None, None
+        for r, txn in self.txns.items():
+            if not self.group.alive[r] or txn._state != "ready":
+                continue
+            try:
+                txn.commit()
+            except Exception as e:
+                err = err or e
+                self.group.mark_failed(r)
+                continue
+            if remap is None:
+                remap = txn.remap
+        return remap, err
+
+    def abort(self) -> None:
+        for txn in self.txns.values():
+            if txn._state in ("open", "ready"):
+                try:
+                    txn.abort()
+                except Exception:
+                    pass
+
+
+# --------------------------------------------------------------------- #
 class _ShardedIndexView:
     """Facade matching the bits of DynamicIndex callers poke at."""
 
-    def __init__(self, shards: List[DynamicIndex], tokenizer, featurizer):
-        self._shards = shards
+    def __init__(self, groups: List[ReplicaGroup], tokenizer, featurizer):
+        self._groups = groups
         self.tokenizer = tokenizer
         self.featurizer = featurizer
 
     @property
     def _segments(self) -> tuple:
         out = []
-        for s in self._shards:
-            out.extend(s._segments)
+        for g in self._groups:
+            out.extend(g.replicas[g.first_alive()]._segments)
         return tuple(out)
 
     def merge_segments(self, upto: Optional[int] = None) -> None:
-        for s in self._shards:
-            s.merge_segments(upto)
+        # compaction is deterministic, so live replicas stay equivalent
+        for g in self._groups:
+            with g.write_lock:
+                for r in g.live():
+                    g.replicas[r].merge_segments(upto)
 
 
 class ShardedWarren:
-    """K-shard warren with the single-Warren lifecycle surface."""
+    """K×R replicated shard groups with the single-Warren lifecycle surface."""
 
-    def __init__(self, n_shards: int = 4,
+    def __init__(self, n_shards: int = 4, replicas: int = 1,
                  tokenizer: Optional[Tokenizer] = None,
                  featurizer: Optional[Featurizer] = None,
                  log_dir: Optional[str] = None,
-                 _shards: Optional[List[DynamicIndex]] = None):
+                 _shards: Optional[List[DynamicIndex]] = None,
+                 _groups: Optional[List[ReplicaGroup]] = None,
+                 _hooks: Optional[dict] = None):
         self.tokenizer = tokenizer or Utf8Tokenizer()
         self.featurizer = featurizer or JsonFeaturizer()
-        if _shards is not None:
-            self.shards = _shards
+        if _groups is not None:
+            self.groups = _groups
+        elif _shards is not None:        # back-compat: bare index list
+            self.groups = [ReplicaGroup(g, [idx])
+                           for g, idx in enumerate(_shards)]
         else:
-            self.shards = []
-            for i in range(n_shards):
-                path = (f"{log_dir}/shard{i:02d}.log"
-                        if log_dir is not None else None)
-                idx = DynamicIndex(self.tokenizer, self.featurizer,
-                                   log_path=path)
-                idx._next_addr = i * STRIPE
-                self.shards.append(idx)
-        self.n_shards = len(self.shards)
-        self.index = _ShardedIndexView(self.shards, self.tokenizer,
+            if replicas < 1:
+                raise ValueError("replicas must be >= 1")
+            self.groups = []
+            for g in range(n_shards):
+                reps = []
+                for r in range(replicas):
+                    path = (f"{log_dir}/shard{g:02d}r{r}.log"
+                            if log_dir is not None else None)
+                    idx = DynamicIndex(self.tokenizer, self.featurizer,
+                                       log_path=path)
+                    idx._next_addr = g * STRIPE
+                    reps.append(idx)
+                self.groups.append(ReplicaGroup(g, reps))
+        self.n_shards = len(self.groups)
+        self.replicas = max(g.n_replicas for g in self.groups)
+        # primaries, for callers that want one index per logical shard
+        self.shards = [g.replicas[0] for g in self.groups]
+        self.index = _ShardedIndexView(self.groups, self.tokenizer,
                                        self.featurizer)
-        self._warrens = [Warren(s) for s in self.shards]
+        # test/ops hooks, shared across clones:
+        #   "on_ready"(group_id, replica)  — phase 1, before each ready()
+        #   "mid_commit"(warren, group_id) — between phase 1 and phase 2
+        self.hooks: dict = _hooks if _hooks is not None else {}
         self._started = False
-        self._txn_open: Dict[int, Warren] = {}   # shard -> warren with txn
+        self._read: List[Tuple[int, Warren]] = []    # per group: (replica, warren)
+        # monotonic session reads: highest segment seqnum this clone has
+        # served per group; failover never steps behind it
+        self._hwm: List[int] = [-1] * self.n_shards
+        self._txn_open: Dict[int, _GroupTxn] = {}    # group -> fan-out txn
         self._txn_active = False
+        self._txn_ready = False
+        self._held: List[int] = []                   # group locks held
         self._append_shard: Optional[int] = None
+
+    # -- replica lifecycle ------------------------------------------------ #
+    def mark_failed(self, group: int, replica: int) -> None:
+        """Fail-stop a replica: it stops serving reads and taking writes."""
+        self.groups[group].mark_failed(replica)
+
+    def resurrect(self, group: int, replica: int) -> None:
+        """Re-sync a failed replica from a healthy sibling and re-join it."""
+        self.groups[group].resurrect(replica)
+
+    def health(self) -> List[List[bool]]:
+        return [list(g.alive) for g in self.groups]
 
     # -- lifecycle ------------------------------------------------------ #
     def clone(self) -> "ShardedWarren":
         return ShardedWarren(tokenizer=self.tokenizer,
-                             featurizer=self.featurizer, _shards=self.shards)
+                             featurizer=self.featurizer, _groups=self.groups,
+                             _hooks=self.hooks)
 
     def start(self) -> None:
         if self._started:
             raise RuntimeError("already started")
-        for w in self._warrens:
-            w.start()
+        self._read = [self._start_read(g) for g in self.groups]
         self._started = True
 
+    def _start_read(self, group: ReplicaGroup,
+                    catchup: float = 2.0) -> Tuple[int, Warren]:
+        """Start a read warren on a live replica whose snapshot has caught
+        up to this clone's high-water seqnum for the group.
+
+        Per-group commits are serialized under the group write lock, so a
+        replica's published segments form a seqnum-ordered prefix; a
+        snapshot at max-seq ≥ the high-water mark therefore contains every
+        transaction this session has already observed (monotonic session
+        reads — failover mid-publish can never step backwards).  A replica
+        still publishing catches up within the commit window, hence the
+        brief bounded wait.
+        """
+        gid = group.group_id
+        last: Optional[Exception] = None
+        deadline = time.monotonic() + catchup
+        while True:
+            for r in group.live():
+                w = Warren(group.replicas[r])
+                try:
+                    w.start()
+                except Exception as e:   # failover past a broken replica
+                    group.mark_failed(r)
+                    last = e
+                    continue
+                seq = max((s.seqnum for s in w._snapshot.segments),
+                          default=-1)
+                if seq >= self._hwm[gid]:
+                    self._hwm[gid] = seq
+                    return (r, w)
+                w.end()                  # stale: publish in flight; retry
+            if not group.live():
+                raise ReplicaFailure(
+                    f"shard group {gid}: no live replica") from last
+            if time.monotonic() > deadline:
+                raise ReplicaFailure(
+                    f"shard group {gid}: no live replica caught up to "
+                    f"seq {self._hwm[gid]}")
+            time.sleep(0.0005)
+
     def end(self) -> None:
-        for w in self._warrens:
+        for _, w in self._read:
             w.end()
+        self._read = []
         self._started = False
 
     def __enter__(self) -> "ShardedWarren":
@@ -128,10 +416,7 @@ class ShardedWarren:
 
     def __exit__(self, *exc) -> bool:
         if self._txn_active:
-            for w in self._txn_open.values():
-                if w._txn is not None and w._txn._state in ("open", "ready"):
-                    w.abort()
-            self._reset_txn()
+            self._abort_locked()
         self.end()
         return False
 
@@ -145,20 +430,22 @@ class ShardedWarren:
     def _reset_txn(self) -> None:
         self._txn_open = {}
         self._txn_active = False
+        self._txn_ready = False
         self._append_shard = None
 
-    def _txn_warren(self, shard: int) -> Warren:
+    def _txn_group(self, group: int) -> _GroupTxn:
         if not self._txn_active:
             raise RuntimeError("no active transaction")
-        w = self._txn_open.get(shard)
-        if w is None:
-            w = self._warrens[shard]
-            w.transaction()
-            self._txn_open[shard] = w
-        return w
+        if self._txn_ready:
+            raise RuntimeError("transaction already readied")
+        gt = self._txn_open.get(group)
+        if gt is None:
+            gt = _GroupTxn(self.groups[group])
+            self._txn_open[group] = gt
+        return gt
 
     def _route_addr(self, p: int) -> int:
-        if p < 0:                      # staging address -> the append shard
+        if p < 0:                      # staging address -> the append group
             if self._append_shard is None:
                 raise RuntimeError("staging address with no appends")
             return self._append_shard
@@ -167,80 +454,139 @@ class ShardedWarren:
     def append(self, text: str) -> Tuple[int, int]:
         if self._append_shard is None:
             self._append_shard = route_text(text, self.n_shards)
-        return self._txn_warren(self._append_shard).append(text)
+        return self._txn_group(self._append_shard).append(text)
 
     def annotate(self, feature, p: int, q: int, v: float = 0.0,
                  v_is_address: bool = False) -> None:
-        shard = self._route_addr(p)
-        if v_is_address and v < 0 and shard != self._append_shard:
+        group = self._route_addr(p)
+        if v_is_address and v < 0 and group != self._append_shard:
             raise ValueError("staging-valued annotation on a foreign shard")
-        self._txn_warren(shard).annotate(feature, p, q, v,
-                                         v_is_address=v_is_address)
+        self._txn_group(group).annotate(feature, p, q, v, v_is_address)
 
     def erase(self, p: int, q: int) -> None:
-        self._txn_warren(self._route_addr(p)).erase(p, q)
+        self._txn_group(self._route_addr(p)).erase(p, q)
+
+    # -- two-phase quorum commit ------------------------------------------ #
+    def _acquire_locks(self) -> None:
+        for g in sorted(self._txn_open):     # ascending order: deadlock-free
+            self.groups[g].write_lock.acquire()
+            self._held.append(g)
+
+    def _release_locks(self) -> None:
+        for g in reversed(self._held):
+            self.groups[g].write_lock.release()
+        self._held = []
+
+    def _phase1(self) -> None:
+        """Quorum-ready every touched group or raise QuorumError."""
+        hook = self.hooks.get("on_ready")
+        for g in sorted(self._txn_open):
+            gt = self._txn_open[g]
+            ok = gt.quorum_ready(hook=hook)
+            if ok < gt.group.quorum:
+                raise QuorumError(
+                    f"shard group {g}: {ok}/{gt.group.n_replicas} replicas "
+                    f"ready, quorum is {gt.group.quorum}")
 
     def ready(self) -> None:
-        for w in self._txn_open.values():
-            w.ready()
-
-    def commit(self):
-        """Two-phase commit across every shard this transaction touched."""
+        """Phase 1 now; the group write locks stay held until commit()/
+        abort() so replicas cannot drift between the phases."""
         if not self._txn_active:
             raise RuntimeError("no active transaction")
-        opened = list(self._txn_open.values())
+        if self._txn_ready:
+            raise RuntimeError("transaction already readied")
+        self._acquire_locks()
         try:
-            for w in opened:                   # phase 1: all durable-ready
-                if w._txn is not None and w._txn._state == "open":
-                    w.ready()
+            self._phase1()
         except Exception:
-            self.abort()                       # nothing published yet
+            self._abort_locked()
             raise
-        append_w = (self._txn_open.get(self._append_shard)
-                    if self._append_shard is not None else None)
-        append_remap = None
-        failed = None
-        for w in opened:                       # phase 2: publish
+        self._txn_ready = True
+
+    def commit(self):
+        """Two-phase quorum commit across every group this transaction
+        touched; raises QuorumError (cleanly aborted) when any group cannot
+        ready a majority of its replicas."""
+        if not self._txn_active:
+            raise RuntimeError("no active transaction")
+        if not self._txn_ready:
+            self._acquire_locks()
             try:
-                remap = w.commit()
-            except Exception as e:             # keep going: every shard's
-                failed = failed or e           # ready record is durable, so
-                continue                       # recovery can replay it
-            if w is append_w:
-                append_remap = remap
-        self._reset_txn()
+                self._phase1()
+            except Exception:
+                self._abort_locked()
+                raise
+        mid = self.hooks.get("mid_commit")
+        if mid is not None:
+            for g in sorted(self._txn_open):
+                mid(self, g)
+        append_remap = None
+        failed: Optional[BaseException] = None
+        try:
+            for g in sorted(self._txn_open):   # phase 2: publish
+                remap, err = self._txn_open[g].commit_live()
+                if remap is None:              # every replica of g failed —
+                    failed = failed or err or RuntimeError(  # ready records
+                        f"shard group {g}: no replica published")  # durable
+                elif g == self._append_shard:
+                    append_remap = remap
+        finally:
+            self._release_locks()
+            self._reset_txn()
         if failed is not None:
             raise RuntimeError(
-                "partial cross-shard commit: some shards published, the "
+                "partial cross-shard commit: some groups published, the "
                 "rest are recoverable from their ready records") from failed
         return append_remap if append_remap is not None else (lambda a: a)
 
     def abort(self) -> None:
         if not self._txn_active:
             raise RuntimeError("no active transaction")
-        for w in self._txn_open.values():
-            w.abort()
+        self._abort_locked()
+
+    def _abort_locked(self) -> None:
+        for gt in self._txn_open.values():
+            gt.abort()
+        self._release_locks()
         self._reset_txn()
 
-    # -- reads (merged across shards) ------------------------------------- #
+    # -- reads (merged across groups, replica failover) -------------------- #
+    def _group_read(self, group: int, fn):
+        """Run ``fn(warren)`` on the group's serving replica, failing over
+        to a live sibling when the replica was marked failed or raises
+        ReplicaFailure."""
+        grp = self.groups[group]
+        for _ in range(grp.n_replicas + 1):
+            r, w = self._read[group]
+            if not grp.alive[r]:
+                self._read[group] = self._start_read(grp)
+                continue
+            try:
+                return fn(w)
+            except ReplicaFailure:
+                grp.mark_failed(r)
+                self._read[group] = self._start_read(grp)
+        raise ReplicaFailure(f"shard group {group}: failover exhausted")
+
     def featurize(self, feature: str) -> int:
         return self.featurizer.featurize(feature)
 
     def annotations(self, feature) -> AnnotationList:
         self._require_started()
         fval = feature if isinstance(feature, int) else self.featurize(feature)
-        return merge_lists([w.annotations(fval) for w in self._warrens])
+        return merge_lists([self._group_read(g, lambda w: w.annotations(fval))
+                            for g in range(self.n_shards)])
 
     def hopper(self, feature) -> Term:
         return Term(self.annotations(feature))
 
     def translate(self, p: int, q: int) -> Optional[str]:
         self._require_started()
-        return self._warrens[shard_of(p)].translate(p, q)
+        return self._group_read(shard_of(p), lambda w: w.translate(p, q))
 
     def tokens(self, p: int, q: int) -> Optional[List[str]]:
         self._require_started()
-        return self._warrens[shard_of(p)].tokens(p, q)
+        return self._group_read(shard_of(p), lambda w: w.tokens(p, q))
 
     def phrase(self, text: str) -> GCLNode:
         self._require_started()
@@ -252,9 +598,10 @@ class ShardedWarren:
 
     # -- scatter-gather serving ------------------------------------------- #
     def global_stats(self) -> ranking.CollectionStats:
-        """Cross-shard collection statistics (one pass, reduced)."""
+        """Cross-group collection statistics (one pass, reduced)."""
         self._require_started()
-        per = [ranking.collection_stats(w) for w in self._warrens]
+        per = [self._group_read(g, ranking.collection_stats)
+               for g in range(self.n_shards)]
         n_docs = sum(s.n_docs for s in per)
         total_len = sum(float(s.doc_lens.sum()) for s in per)
         avgdl = total_len / n_docs if n_docs else 1.0
@@ -266,36 +613,42 @@ class ShardedWarren:
 
     def search(self, query: str, k: int = 10, k1: float = 0.9,
                b: float = 0.4) -> List[Tuple[int, float]]:
-        """Scatter-gather BM25: per-shard top-k + global k-way merge.
+        """Scatter-gather BM25: per-group top-k + global k-way merge.
 
-        Global document frequencies and avgdl make per-shard scores exactly
-        the single-index scores, so the merged top-k is exact.
+        Global document frequencies and avgdl make per-group scores exactly
+        the single-index scores, so the merged top-k is exact — from any
+        live replica of each group.
         """
         self._require_started()
-        per = [ranking.collection_stats(w) for w in self._warrens]
+        terms = list(dict.fromkeys(ranking.ranking_tokens(query)))
+        fvals = [ranking.TF_PREFIX + ranking.porter_stem(t) for t in terms]
+        # scatter 1: per-group stats + term lists (one replica per group)
+        gathered = [self._group_read(
+            g, lambda w: (ranking.collection_stats(w),
+                          [w.annotations(f) for f in fvals]))
+            for g in range(self.n_shards)]
+        per = [s for s, _ in gathered]
+        lists = [l for _, l in gathered]
         n_docs = sum(s.n_docs for s in per)
         if n_docs == 0:
             return []
         total_len = sum(float(s.doc_lens.sum()) for s in per)
         avgdl = total_len / n_docs
-        terms = list(dict.fromkeys(ranking.ranking_tokens(query)))
-        fvals = [ranking.TF_PREFIX + ranking.porter_stem(t) for t in terms]
-        # scatter 1: per-shard term lists; reduce document frequencies
-        lists = [[w.annotations(f) for f in fvals] for w in self._warrens]
-        dfs = [sum(len(lists[si][ti]) for si in range(self.n_shards))
+        # reduce document frequencies
+        dfs = [sum(len(lists[gi][ti]) for gi in range(self.n_shards))
                for ti in range(len(terms))]
-        # scatter 2: score each shard with the GLOBAL idf/avgdl
-        per_shard_topk: List[List[Tuple[float, int]]] = []
-        for si, stats in enumerate(per):
+        # scatter 2: score each group with the GLOBAL idf/avgdl
+        per_group_topk: List[List[Tuple[float, int]]] = []
+        for gi, stats in enumerate(per):
             if stats.n_docs == 0:
-                per_shard_topk.append([])
+                per_group_topk.append([])
                 continue
             local = ranking.CollectionStats(stats.n_docs, avgdl,
                                             stats.doc_starts, stats.doc_ends,
                                             stats.doc_lens)
             acc = np.zeros(stats.n_docs)
             for ti in range(len(terms)):
-                lst = lists[si][ti]
+                lst = lists[gi][ti]
                 if len(lst) == 0 or dfs[ti] == 0:
                     continue
                 idf = ranking._bm25_idf(n_docs, dfs[ti])
@@ -304,42 +657,47 @@ class ShardedWarren:
             kk = min(k, stats.n_docs)
             top = np.argpartition(-acc, kk - 1)[:kk]
             top = top[np.argsort(-acc[top], kind="stable")]
-            per_shard_topk.append(
+            per_group_topk.append(
                 [(float(acc[i]), int(stats.doc_starts[i]))
                  for i in top if acc[i] > 0])
-        # gather: k-way merge of per-shard results
-        merged = heapq.merge(*per_shard_topk, key=lambda t: -t[0])
+        # gather: k-way merge of per-group results
+        merged = heapq.merge(*per_group_topk, key=lambda t: -t[0])
         return [(d, s) for s, d in list(merged)[:k]]
 
     def search_gcl(self, query_text: str, limit: int = 1000) -> List:
-        """Scatter-gather structural query: solve per shard, concatenate.
+        """Scatter-gather structural query: solve per group, concatenate.
 
         Exact when query solutions don't cross shard stripes — true for any
         query over intra-document structure, since a document lives wholly
-        inside one shard.
+        inside one group.
         """
         from repro.core.query import solve
         self._require_started()
         out = []
-        for w in self._warrens:
-            out.extend(solve(query_text, w, limit=limit))
+        for g in range(self.n_shards):
+            out.extend(self._group_read(
+                g, lambda w: solve(query_text, w, limit=limit)))
         out.sort()
         return out[:limit]
 
     # -- fault tolerance --------------------------------------------------- #
     def checkpoint(self, manager, step: int) -> None:
-        """Snapshot every shard through a CheckpointManager."""
-        for i, idx in enumerate(self.shards):
-            manager.save_index(step, idx, name=f"shard{i:02d}")
+        """Snapshot one live replica per group through a CheckpointManager
+        (replicas are lockstep-identical, so one copy per group suffices)."""
+        for g, group in enumerate(self.groups):
+            src = group.replicas[group.first_alive()]
+            manager.save_index(step, src, name=f"shard{g:02d}")
 
     @staticmethod
     def restore(manager, step: int, tokenizer: Optional[Tokenizer] = None,
-                featurizer: Optional[Featurizer] = None) -> "ShardedWarren":
-        """Rebuild from per-shard snapshot logs at ``step``.
+                featurizer: Optional[Featurizer] = None,
+                replicas: int = 1) -> "ShardedWarren":
+        """Rebuild from per-group snapshot logs at ``step``, fanning each
+        group's snapshot out to ``replicas`` independent copies.
 
-        A gap in the shard set (a torn multi-shard checkpoint) is an error,
-        never a silent truncation — addresses route by shard number, so a
-        missing middle shard would corrupt routing for every later shard.
+        A gap in the group set (a torn multi-shard checkpoint) is an error,
+        never a silent truncation — addresses route by group number, so a
+        missing middle group would corrupt routing for every later group.
         """
         from repro.dist.checkpoint import CheckpointCorrupt
 
@@ -357,15 +715,16 @@ class ShardedWarren:
                 f"of {max(present) + 1}")
         tokenizer = tokenizer or Utf8Tokenizer()
         featurizer = featurizer or JsonFeaturizer()
-        shards: List[DynamicIndex] = []
-        for i in sorted(present):
-            idx = manager.restore_index(step, name=f"shard{i:02d}",
-                                        tokenizer=tokenizer,
-                                        featurizer=featurizer)
-            idx._next_addr = max(idx._next_addr, i * STRIPE)
-            shards.append(idx)
+        groups: List[ReplicaGroup] = []
+        for g in sorted(present):
+            reps = manager.restore_index_replicas(
+                step, name=f"shard{g:02d}", n=replicas,
+                tokenizer=tokenizer, featurizer=featurizer)
+            for idx in reps:
+                idx._next_addr = max(idx._next_addr, g * STRIPE)
+            groups.append(ReplicaGroup(g, reps))
         return ShardedWarren(tokenizer=tokenizer, featurizer=featurizer,
-                             _shards=shards)
+                             _groups=groups)
 
     # -- internals --------------------------------------------------------- #
     def _require_started(self) -> None:

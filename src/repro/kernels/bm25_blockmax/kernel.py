@@ -26,11 +26,15 @@ def _blockmax_kernel(theta_ref, bmax_ref, impacts_ref, o_ref):
     ub = jnp.sum(bmax_ref[...])
     theta = theta_ref[0, 0]
 
-    @pl.when(ub > theta)
+    # θ comes from a subset of true scores, so θ <= true kth-best; a block
+    # at ub == θ may still hold a doc scoring exactly kth-best (the probe
+    # pre-pass hits this whenever it scored the top block itself), so only
+    # strictly-below blocks may be skipped.
+    @pl.when(ub >= theta)
     def _():
         o_ref[...] = jnp.sum(impacts_ref[...], axis=0)
 
-    @pl.when(ub <= theta)
+    @pl.when(ub < theta)
     def _():
         o_ref[...] = jnp.full_like(o_ref, NEG_INF)
 

@@ -36,10 +36,14 @@ def bm25_blockmax_topk(impacts, block_max, k: int, use_pallas: bool = True,
     # --- pruned sweep ----------------------------------------------------- #
     scores = blockmax_scores_pallas(impacts, block_max, theta,
                                     interpret=interpret)  # [NB, BS]
+    # pruned blocks carry -inf; clamp to the true score floor (impacts are
+    # non-negative) so a top-k that spills past the last positive doc reads
+    # 0 exactly like the exhaustive oracle
+    scores = jnp.maximum(scores, 0.0)
     return jax.lax.top_k(scores.reshape(-1), k)
 
 
 def pruned_fraction(block_max, theta) -> jnp.ndarray:
     """Diagnostic: fraction of blocks the kernel skips at threshold θ."""
     ub = block_max.sum(axis=0)
-    return jnp.mean((ub <= theta).astype(jnp.float32))
+    return jnp.mean((ub < theta).astype(jnp.float32))

@@ -9,3 +9,4 @@ hypothesis_stub.install()
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    # the stress marker is registered once, in pyproject.toml

@@ -85,6 +85,117 @@ def test_bm25_blockmax_prunes():
 
 
 # ------------------------------------------------------------------ #
+# degenerate shapes: the failure modes happy-path sweeps never reach
+# ------------------------------------------------------------------ #
+def _bm25_parity(impacts, k):
+    """Pallas vs oracle: exact positive scores, tie-tolerant ids."""
+    impacts = jnp.asarray(impacts)
+    got_s, got_i = bm25_blockmax_topk(impacts, impacts.max(axis=2), k=k)
+    want_s, want_i = bm25_topk_ref(impacts, k)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               rtol=1e-5, atol=1e-6)
+    assert set(np.asarray(got_i)[np.asarray(got_s) > 0]) == \
+           set(np.asarray(want_i)[np.asarray(want_s) > 0])
+
+
+def test_bm25_blockmax_empty_posting_list():
+    """All-zero impacts (no term hits anything): no -inf junk, all zeros."""
+    _bm25_parity(np.zeros((2, 4, 128), np.float32), k=5)
+
+
+def test_bm25_blockmax_single_element_block():
+    """[1, 1, 1]: the θ pre-pass scores the only doc exactly, so the block
+    sits at ub == θ — it must be swept, not pruned (regression: the strict
+    ub > θ predicate dropped the true top-1 here)."""
+    imp = np.zeros((1, 1, 1), np.float32)
+    imp[0, 0, 0] = 2.5
+    _bm25_parity(imp, k=1)
+
+
+def test_bm25_blockmax_theta_tie_boundary():
+    """Several blocks tied at exactly ub == θ: every tied block must be
+    scored so the returned score multiset matches the oracle."""
+    imp = np.zeros((1, 4, 8), np.float32)
+    imp[0, :, 3] = 1.0                   # one doc of score 1.0 per block
+    _bm25_parity(imp, k=4)
+
+
+@pytest.mark.parametrize("t,nb,bs,k", [(1, 1, 100, 3), (3, 5, 100, 7),
+                                       (2, 3, 7, 4)])
+def test_bm25_blockmax_block_length_not_tile_divisible(t, nb, bs, k):
+    """BS not a multiple of the 128-lane tile (interpret-mode contract)."""
+    rng = np.random.default_rng(t * 31 + nb)
+    imp = rng.random((t, nb, bs), dtype=np.float32)
+    imp *= rng.random((t, nb, bs)) < 0.2
+    _bm25_parity(imp.astype(np.float32), k=min(k, nb * bs))
+
+
+def test_bm25_blockmax_k_exceeds_positive_docs():
+    """Top-k spilling past the last positive doc pads with zeros, like the
+    exhaustive oracle — never -inf."""
+    imp = np.zeros((2, 2, 8), np.float32)
+    imp[0, 0, 1] = 3.0
+    imp[1, 1, 4] = 1.5
+    impacts = jnp.asarray(imp)
+    got_s, _ = bm25_blockmax_topk(impacts, impacts.max(axis=2), k=10)
+    want_s, _ = bm25_topk_ref(impacts, 10)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               rtol=1e-6, atol=1e-6)
+    assert np.isfinite(np.asarray(got_s)).all()
+
+
+@pytest.mark.parametrize("mode", ["contained_in", "containing"])
+def test_interval_join_empty_lists(mode):
+    """pack() of an empty GC-list yields a single PAD entry; the join must
+    return an all-zero mask on either (or both) sides."""
+    empty = pack(np.array([], np.int64), np.array([], np.int64))
+    one = pack(np.array([5], np.int64), np.array([9], np.int64))
+    for a, b in [(empty, one), (one, empty), (empty, empty)]:
+        got = interval_join(a[0], a[1], b[0], b[1], mode=mode,
+                            use_pallas=True)
+        ref_fn = (contained_in_mask_ref if mode == "contained_in"
+                  else containing_mask_ref)
+        want = ref_fn(a[0], a[1], b[0], b[1])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert not np.asarray(got).any()
+
+
+@pytest.mark.parametrize("a,b,contained,containing", [
+    ((5, 9), (4, 10), 1, 0),      # A strictly inside B
+    ((4, 10), (5, 9), 0, 1),      # A strictly contains B
+    ((5, 9), (5, 9), 1, 1),       # identical intervals contain each other
+    ((5, 9), (20, 30), 0, 0),     # disjoint
+])
+def test_interval_join_single_element(a, b, contained, containing):
+    a_s, a_e, _ = pack(np.array([a[0]], np.int64), np.array([a[1]], np.int64))
+    b_s, b_e, _ = pack(np.array([b[0]], np.int64), np.array([b[1]], np.int64))
+    got_in = interval_join(a_s, a_e, b_s, b_e, mode="contained_in")
+    got_on = interval_join(a_s, a_e, b_s, b_e, mode="containing")
+    assert int(np.asarray(got_in)[0]) == contained
+    assert int(np.asarray(got_on)[0]) == containing
+
+
+@pytest.mark.parametrize("na,nb,tile", [(13, 5, 8), (20, 17, 8), (1, 9, 8),
+                                        (257, 3, 128)])
+@pytest.mark.parametrize("mode", ["contained_in", "containing"])
+def test_interval_join_list_length_not_tile_divisible(na, nb, tile, mode):
+    """Lengths that leave a partial final tile: the pad entries must never
+    join, and multi-tile accumulation must match the oracle exactly."""
+    from repro.kernels.interval_join.kernel import interval_join_pallas
+    rng = np.random.default_rng(na * 100 + nb + tile)
+    A = random_gc_list(rng, na, span=4000)
+    B = random_gc_list(rng, nb, span=4000)
+    a_s, a_e, _ = pack(A.starts, A.ends)
+    b_s, b_e, _ = pack(B.starts, B.ends)
+    got = interval_join_pallas(a_s, a_e, b_s, b_e, mode=mode,
+                               tile_a=tile, tile_b=tile)
+    ref_fn = (contained_in_mask_ref if mode == "contained_in"
+              else containing_mask_ref)
+    want = ref_fn(a_s, a_e, b_s, b_e)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------------ #
 @pytest.mark.parametrize("b,hkv,g,d,s", [(2, 2, 4, 64, 256), (1, 4, 1, 128, 512),
                                          (2, 1, 8, 128, 300), (4, 2, 2, 64, 1024)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -55,6 +55,105 @@ def test_static_index_roundtrip(tmp_path):
     si.close()
 
 
+def test_static_roundtrip_forced_zlib_fallback(tmp_path, monkeypatch):
+    """write_static of a committed snapshot, re-read with the zlib codec
+    path forced (as if zstandard were not installed): every blob must be
+    self-describing and the erased state must survive the round trip."""
+    from repro.core import codec
+
+    monkeypatch.setattr(codec, "_zstd", None)
+    monkeypatch.setattr(codec, "_zstd_c", None)
+    monkeypatch.setattr(codec, "_zstd_d", None)
+
+    idx = DynamicIndex()
+    w = Warren(idx)
+    with w:
+        w.transaction()
+        for i in range(8):
+            index_document(w, f"fallback document {i} shared fox",
+                           docid=f"d{i}")
+        w.commit()
+    with w:
+        lst = w.annotations("docid:d3")
+        victim = (int(lst.starts[0]), int(lst.ends[0]))
+    with w:
+        w.transaction()
+        w.erase(*victim)
+        w.commit()
+
+    d = str(tmp_path / "static")
+    write_static(idx, d)
+    with open(d + "/content.bin", "rb") as fh:
+        from repro.core.codec import ZLIB
+        assert fh.read(1)[0] == ZLIB          # the fallback really engaged
+
+    si = StaticIndex(d)
+    assert len(si.annotations(":")) == 7      # erased doc is gone
+    assert len(si.annotations("docid:d3")) == 0
+    # regression: erased CONTENT must not leak back through the static
+    # layout — dynamic and static agree that the span is unreadable
+    with w:
+        assert w.translate(*victim) is None
+    assert si.translate(*victim) is None
+    assert si.tokens(*victim) is None
+    # a partial overlap with the erased interval is unreadable too
+    assert si.translate(victim[0] + 1, victim[1] + 1) is None
+    surviving = si.annotations("docid:d0")
+    t = si.translate(int(surviving.starts[0]), int(surviving.ends[0]))
+    assert t == "fallback document 0 shared fox"
+    top = score_bm25(si, "fox shared", k=3)
+    assert len(top) == 3
+    si.close()
+
+
+def test_static_legacy_meta_without_erased_fields(tmp_path):
+    """Directories written before the erased list existed (no er_* keys in
+    meta.msgpack) must load with nothing hidden."""
+    import msgpack
+
+    idx = DynamicIndex()
+    w = Warren(idx)
+    with w:
+        w.transaction()
+        index_document(w, "legacy layout doc", docid="d0")
+        w.commit()
+    d = str(tmp_path / "static")
+    write_static(idx, d)
+    with open(d + "/meta.msgpack", "rb") as fh:
+        meta = msgpack.unpackb(fh.read(), raw=False)
+    for k in ("er_n", "er_s", "er_e"):
+        meta.pop(k)
+    with open(d + "/meta.msgpack", "wb") as fh:
+        fh.write(msgpack.packb(meta))
+    si = StaticIndex(d)
+    docs = si.annotations(":")
+    assert len(docs) == 1
+    assert si.translate(int(docs.starts[0]),
+                        int(docs.ends[0])) == "legacy layout doc"
+    si.close()
+
+
+def test_codec_legacy_raw_zstd_frame_without_zstd(monkeypatch):
+    """A pre-codec-byte blob (raw zstd frame) read in a zlib-only
+    environment must fail loudly naming the missing codec — never be
+    misparsed as an unknown codec byte."""
+    from repro.core import codec
+
+    monkeypatch.setattr(codec, "_zstd", None)
+    monkeypatch.setattr(codec, "_zstd_d", None)
+    legacy = b"\x28\xb5\x2f\xfd" + b"\x00" * 16   # zstd magic + frame bytes
+    with np.testing.assert_raises(RuntimeError):
+        codec.decompress(legacy)
+    try:
+        codec.decompress(legacy)
+    except RuntimeError as e:
+        assert "zstandard" in str(e)
+    # zlib-tagged blobs always decode, zstd or not
+    blob = codec.compress(b"fallback payload" * 10)
+    assert blob[0] == codec.ZLIB
+    assert codec.decompress(blob) == b"fallback payload" * 10
+
+
 def test_graph_store_friends():
     w = Warren(DynamicIndex())
     g = GraphStore(w)
