@@ -1,6 +1,10 @@
 """Index-construction throughput (paper §4 build-time discussion):
-single-writer vs multi-writer dynamic build, and static freeze."""
+single-writer vs multi-writer dynamic build, static freeze, and — with
+``--tiered`` — hot-tier build rate under background LSM compaction, with
+the compaction pause time (the only reader/writer-visible stall) reported
+per run so regressions show up per-PR in the CI smoke job."""
 
+import argparse
 import tempfile
 import threading
 import time
@@ -60,5 +64,66 @@ def run(n_docs: int = 1500, n_writers: int = 4):
     return {"single_s": single_s, "multi_s": multi_s, "static_s": static_s}
 
 
+def run_tiered(n_docs: int = 1500, batch: int = 64,
+               freeze_segments: int = 4, max_runs: int = 3,
+               smoke: bool = False):
+    """Hot-tier build rate with the background compactor freezing and
+    merging concurrently; reports run counts and compaction pause times."""
+    from repro.core import score_bm25
+    from repro.tiered import Compactor, TieredStore
+
+    docs = list(doc_generator(0, n_docs))
+    with tempfile.TemporaryDirectory() as td:
+        store = TieredStore(td + "/tiered", auto_merge_threshold=8)
+        compactor = Compactor(store, freeze_segments=freeze_segments,
+                              max_runs=max_runs, interval_s=0.01).start()
+        w = store.warren()
+        t0 = time.time()
+        for i in range(0, len(docs), batch):
+            with w:
+                w.transaction()
+                for docid, text in docs[i:i + batch]:
+                    index_document(w, text, docid=docid)
+                w.commit()
+        build_s = time.time() - t0
+        compactor.stop(drain=True)
+        m = store.metrics
+        with w:
+            n_indexed = len(w.annotations(":"))
+            top = score_bm25(w, "school education student", k=10)
+        ok = n_indexed == n_docs
+        print(f"# tiered build: {n_docs} docs, batch {batch}")
+        print(f"hot-tier build:        {build_s:6.2f}s "
+              f"({n_docs / build_s:7.0f} docs/s)")
+        print(f"compaction:            {m.summary()}")
+        print(f"state:                 {store.n_runs} runs, "
+              f"{len(store.hot._segments)} hot segments, "
+              f"manifest v{store.manifest.version}")
+        print(f"post-compaction reads: {n_indexed}/{n_docs} docs visible, "
+              f"top-10 len {len(top)} -> {'OK' if ok else 'MISMATCH'}")
+        store.close()
+        if smoke and not ok:
+            raise SystemExit("tiered smoke: indexed-doc count mismatch")
+        if smoke and m.n_freezes == 0:
+            raise SystemExit("tiered smoke: compactor never froze the "
+                             "hot tier")
+        return {"build_s": build_s, "n_freezes": m.n_freezes,
+                "n_merges": m.n_merges, "total_pause_s": m.total_pause_s,
+                "max_pause_s": m.max_pause_s}
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=1500)
+    ap.add_argument("--writers", type=int, default=4)
+    ap.add_argument("--tiered", action="store_true",
+                    help="benchmark the tiered engine (hot build rate + "
+                         "compaction pause time)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fail loudly on lost docs or an idle compactor "
+                         "(CI regression guard)")
+    args = ap.parse_args()
+    if args.tiered:
+        run_tiered(args.docs, smoke=args.smoke)
+    else:
+        run(args.docs, args.writers)

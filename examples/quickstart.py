@@ -4,8 +4,17 @@ Builds a heterogeneous JSON collection, then runs the paper's Example
 queries — containment algebra + aggregation — against the dynamic index.
 
     PYTHONPATH=src python examples/quickstart.py
+
+With ``--tiered`` the collection is built through the LSM-style tiered
+engine instead: the hot memtable is frozen into immutable on-disk runs
+(build → demote → query), and every Example query is answered identically
+from the merged hot+cold view.
+
+    PYTHONPATH=src python examples/quickstart.py --tiered
 """
 
+import argparse
+import tempfile
 import time
 
 from repro.core import (DynamicIndex, Warren, add_json, annotate_dates,
@@ -14,10 +23,63 @@ from repro.core.gcl import BothOf, ContainedIn, Containing, OneOf
 from repro.data.synth import json_collection
 
 
-def main():
-    w = Warren(DynamicIndex())
-    data = json_collection(seed=0, scale=1.0)
+def run_queries(w, quiet: bool = False):
+    """The paper's Example queries; returns results for parity checks."""
+    out = {}
 
+    def show(line):
+        if not quiet:
+            print(line)
+
+    with w:
+        # Example 1: statistics over restaurant ratings
+        ratings = [v for _, _, v in ContainedIn(
+            w.hopper(":rating:"),
+            w.hopper("Files/restaurant.json")).solutions()]
+        out["ex1"] = (min(ratings), sum(ratings) / len(ratings), max(ratings))
+        show(f"Example 1  SELECT MIN,AVG,MAX(rating) FROM restaurant -> "
+             f"{out['ex1'][0]:.1f} / {out['ex1'][1]:.2f} / {out['ex1'][2]:.1f}")
+
+        # Example 2: how many zips in New York?
+        q = ContainedIn(Containing(w.hopper(":city:"), w.phrase("new york")),
+                        w.hopper("Files/zips.json"))
+        out["ex2"] = len(q.solutions())
+        show(f"Example 2  COUNT(*) FROM zips WHERE city='NEW YORK' -> "
+             f"{out['ex2']}")
+
+        # Example 3: names of nanotech companies
+        q = ContainedIn(
+            w.hopper(":name:"),
+            Containing(w.hopper("Files/companies.json"),
+                       ContainedIn(Containing(w.hopper(":category_code:"),
+                                              w.phrase("nanotech")),
+                                   w.hopper("Files/companies.json"))))
+        names = [value_of(w, int(p), int(qq)) for p, qq, _ in q.solutions()]
+        out["ex3"] = names
+        show(f"Example 3  companies WHERE category CONTAINS 'nanotech' -> "
+             f"{len(names)} (e.g. {names[:3]})")
+
+        # Example 4: titles OR authors from books
+        q = ContainedIn(OneOf(w.hopper(":title:"), w.hopper(":authors:")),
+                        w.hopper("Files/books.json"))
+        out["ex4"] = len(q.solutions())
+        show(f"Example 4  title, EXPLODE(authors) FROM books -> "
+             f"{out['ex4']} fields")
+
+        # Example 7: how many objects in the whole database?
+        out["ex7"] = len(w.annotations(":"))
+        show(f"Example 7  COUNT(*) FROM * -> {out['ex7']}")
+
+        # Example 9: objects created in a specific year+month (any schema)
+        q = Containing(w.hopper(":"),
+                       BothOf(w.hopper("year=2008"), w.hopper("month=06")))
+        out["ex9"] = len(q.solutions())
+        show(f"Example 9  COUNT(*) FROM * WHERE created ~ 2008-06 -> "
+             f"{out['ex9']}")
+    return out
+
+
+def build(w, data):
     t0 = time.time()
     with w:
         w.transaction()
@@ -37,46 +99,36 @@ def main():
         w.commit()
     print(f"annotated {n_dates} heterogeneous date fields\n")
 
-    with w:
-        # Example 1: statistics over restaurant ratings
-        ratings = [v for _, _, v in ContainedIn(
-            w.hopper(":rating:"),
-            w.hopper("Files/restaurant.json")).solutions()]
-        print(f"Example 1  SELECT MIN,AVG,MAX(rating) FROM restaurant -> "
-              f"{min(ratings):.1f} / {sum(ratings)/len(ratings):.2f} / "
-              f"{max(ratings):.1f}")
 
-        # Example 2: how many zips in New York?
-        q = ContainedIn(Containing(w.hopper(":city:"), w.phrase("new york")),
-                        w.hopper("Files/zips.json"))
-        print(f"Example 2  COUNT(*) FROM zips WHERE city='NEW YORK' -> "
-              f"{len(q.solutions())}")
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiered", action="store_true",
+                    help="build through the tiered engine and demote the "
+                         "hot tier to on-disk runs before querying")
+    args = ap.parse_args()
+    data = json_collection(seed=0, scale=1.0)
 
-        # Example 3: names of nanotech companies
-        q = ContainedIn(
-            w.hopper(":name:"),
-            Containing(w.hopper("Files/companies.json"),
-                       ContainedIn(Containing(w.hopper(":category_code:"),
-                                              w.phrase("nanotech")),
-                                   w.hopper("Files/companies.json"))))
-        names = [value_of(w, int(p), int(qq)) for p, qq, _ in q.solutions()]
-        print(f"Example 3  companies WHERE category CONTAINS 'nanotech' -> "
-              f"{len(names)} (e.g. {names[:3]})")
+    if not args.tiered:
+        w = Warren(DynamicIndex())
+        build(w, data)
+        run_queries(w)
+        return
 
-        # Example 4: titles OR authors from books
-        q = ContainedIn(OneOf(w.hopper(":title:"), w.hopper(":authors:")),
-                        w.hopper("Files/books.json"))
-        print(f"Example 4  title, EXPLODE(authors) FROM books -> "
-              f"{len(q.solutions())} fields")
-
-        # Example 7: how many objects in the whole database?
-        print(f"Example 7  COUNT(*) FROM * -> {len(w.annotations(':'))}")
-
-        # Example 9: objects created in a specific year+month (any schema)
-        q = Containing(w.hopper(":"),
-                       BothOf(w.hopper("year=2008"), w.hopper("month=06")))
-        print(f"Example 9  COUNT(*) FROM * WHERE created ~ 2008-06 -> "
-              f"{len(q.solutions())}")
+    from repro.tiered import TieredStore
+    with tempfile.TemporaryDirectory() as td:
+        store = TieredStore(td + "/tiered")
+        w = store.warren()
+        build(w, data)
+        hot_results = run_queries(w, quiet=True)     # served from memtable
+        info = store.freeze()                        # demote: hot -> run
+        print(f"froze hot tier -> {info.name} "
+              f"({info.n_records} records, {info.n_features} features); "
+              f"hot segments now: {len(store.hot._segments)}\n")
+        cold_results = run_queries(w)                # served from the run
+        assert cold_results == hot_results, "tier demotion changed answers"
+        print(f"\nhot/cold parity: all {len(cold_results)} Example queries "
+              f"identical before and after demotion")
+        store.close()
 
 
 if __name__ == "__main__":

@@ -32,11 +32,37 @@ def main():
     ap.add_argument("--replicas", type=int, default=1,
                     help="replicas per shard group (quorum commits, "
                          "read failover)")
+    ap.add_argument("--tiered", action="store_true",
+                    help="serve through the LSM-style tiered engine "
+                         "(hot memtable + on-disk runs, background "
+                         "compaction)")
+    ap.add_argument("--demote-cold", action="store_true",
+                    help="with --shards: demote every shard group to a "
+                         "static run set after the build and show query "
+                         "parity (a write promotes a group back)")
     args = ap.parse_args()
+    if args.tiered and (args.shards > 1 or args.replicas > 1):
+        ap.error("--tiered is the single-node engine; for sharded cold "
+                 "storage use --shards N --demote-cold")
 
+    tmpdir = None
+    compactor = None
     if args.shards > 1 or args.replicas > 1:
+        import tempfile
+
         from repro.dist.shard_router import ShardedWarren
-        warren = ShardedWarren(n_shards=args.shards, replicas=args.replicas)
+        tmpdir = tempfile.TemporaryDirectory()
+        warren = ShardedWarren(n_shards=args.shards, replicas=args.replicas,
+                               static_dir=tmpdir.name)
+    elif args.tiered:
+        import tempfile
+
+        from repro.tiered import Compactor, TieredStore
+        tmpdir = tempfile.TemporaryDirectory()
+        store = TieredStore(tmpdir.name + "/tiered")
+        compactor = Compactor(store, freeze_segments=3,
+                              interval_s=0.01).start()
+        warren = store.warren()
     else:
         warren = Warren(DynamicIndex())
     t0 = time.time()
@@ -51,6 +77,11 @@ def main():
                 index_document(warren, text, docid=docid)
             warren.commit()
     print(f"indexed {args.docs} docs in {time.time() - t0:.1f}s")
+    if compactor is not None:
+        compactor.stop(drain=True)   # hot tier -> immutable runs
+        print(f"tiered state: {store.n_runs} runs, "
+              f"{len(store.hot._segments)} hot segments "
+              f"({store.metrics.summary()})")
 
     queries = ["vibration conductor wind", "school education student",
                "government law state", "stock money business"] * 4
@@ -105,12 +136,37 @@ def main():
         print(f"failover (1 replica/group killed): scores identical={same}")
         for g in range(warren.n_shards):
             warren.resurrect(g, g % args.replicas)
+    # cold-shard demotion: freeze every group to on-disk runs, answers
+    # unchanged; the next write transparently promotes its group
+    if args.demote_cold and args.shards > 1:
+        with warren:
+            before = warren.search(queries[0], k=10)
+        for g in range(warren.n_shards):
+            warren.demote_group(g)
+        with warren:
+            after = warren.search(queries[0], k=10)
+        same = [round(s, 9) for _, s in before] == \
+               [round(s, 9) for _, s in after]
+        print(f"cold demotion ({warren.n_shards} groups -> static runs): "
+              f"scores identical={same}")
+        from repro.core import index_document as _idx
+        with warren:
+            warren.transaction()
+            _idx(warren, "fresh hot document wind conductor", docid="dX")
+            warren.commit()
+        n_cold = sum(1 for d in warren.demoted() if d is not None)
+        print(f"write-through promotion: {warren.n_shards - n_cold} group(s) "
+              f"hot again, {n_cold} still cold")
 
     print(f"host engine      : {1e3 * t_host / len(queries):7.2f} ms/query")
     print(f"batched device   : {1e3 * t_dev / len(queries):7.2f} ms/query "
           f"(includes jit)")
     print(f"block-max kernel : {1e3 * t_kernel:7.2f} ms (interpret mode, "
           f"1 query)")
+    if args.tiered:
+        store.close()
+    if tmpdir is not None:
+        tmpdir.cleanup()
 
 
 if __name__ == "__main__":

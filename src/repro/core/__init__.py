@@ -1,7 +1,7 @@
 """Annotative indexing core (Clarke 2024), paper-faithful reference layer."""
 
 from .annotation import (INF, NINF, Annotation, AnnotationList, merge_lists,
-                         reduce_minimal)
+                         reduce_minimal, union_intervals)
 from .featurizer import (HashingFeaturizer, JsonFeaturizer, VocabFeaturizer,
                          murmur64a)
 from .gcl import (BothOf, ContainedIn, Containing, FollowedBy, GCLNode,
@@ -15,7 +15,7 @@ from .ranking import (average_precision, build_block_impacts, collection_stats,
                       score_wand)
 from .query import parse_query, solve
 from .sparse import index_sparse_vector, score_hybrid, score_sparse
-from .static import StaticIndex, write_static
+from .static import StaticIndex, merge_runs, write_run, write_static
 from .stemmer import porter_stem
 from .tokenizer import AsciiTokenizer, Utf8Tokenizer
 from .warren import Warren
@@ -29,7 +29,8 @@ __all__ = [
     "Snapshot", "Transaction", "add_json", "annotate_dates", "render_tokens",
     "value_of", "average_precision", "build_block_impacts", "collection_stats",
     "expand_query", "index_document", "score_blockmax", "score_bm25",
-    "score_wand", "StaticIndex", "write_static", "porter_stem",
+    "score_wand", "StaticIndex", "write_static", "write_run", "merge_runs",
+    "union_intervals", "porter_stem",
     "parse_query", "solve", "index_sparse_vector", "score_hybrid",
     "score_sparse",
     "AsciiTokenizer", "Utf8Tokenizer", "Warren",

@@ -158,6 +158,35 @@ def reduce_minimal(starts: np.ndarray, ends: np.ndarray,
     return AnnotationList(s[keep], e[keep], v[keep], _checked=True)
 
 
+def union_intervals(lists: Iterable[AnnotationList]) -> AnnotationList:
+    """Coalescing union of interval lists (for *erased* sets, not GC-lists).
+
+    Erasure is permanent over a point-set of addresses, so erased intervals
+    must accumulate as a union: overlapping, nested, and adjacent intervals
+    coalesce instead of competing under minimal-interval reduction (where a
+    nested erase would *drop* its enclosing interval and un-hide content).
+    The result is a sorted, disjoint interval list — a valid GC-list — with
+    all values zero.
+    """
+    ls = [l for l in lists if len(l)]
+    if not ls:
+        return AnnotationList.empty()
+    s = np.concatenate([l.starts for l in ls])
+    e = np.concatenate([l.ends for l in ls])
+    order = np.argsort(s, kind="stable")
+    s, e = s[order], e[order]
+    # sweep: start a new interval only where the gap to the running
+    # coalesced end is >= 2 (adjacent intervals merge: erased is a point-set)
+    run_end = np.maximum.accumulate(e)
+    new_run = np.ones(s.size, dtype=bool)
+    new_run[1:] = s[1:] > run_end[:-1] + 1
+    starts = s[new_run]
+    idx = np.flatnonzero(new_run)
+    bounds = np.append(idx[1:], s.size)
+    ends = run_end[bounds - 1]
+    return AnnotationList(starts, ends, np.zeros(starts.size), _checked=True)
+
+
 def merge_lists(lists: Iterable[AnnotationList]) -> AnnotationList:
     """Merge GC-lists from multiple index segments into one GC-list.
 

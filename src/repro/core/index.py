@@ -23,7 +23,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .annotation import AnnotationList, merge_lists, reduce_minimal
+from .annotation import (AnnotationList, merge_lists, reduce_minimal,
+                         union_intervals)
 from .featurizer import Featurizer, JsonFeaturizer
 from .gcl import GCLNode, Term
 from .log import TransactionLog
@@ -98,6 +99,58 @@ class Segment:
                        postings, erased)
 
 
+def erased_overlaps(erased: AnnotationList, p: int, q: int) -> bool:
+    """Does [p, q] intersect any erased interval?"""
+    if len(erased) == 0:
+        return False
+    i = int(np.searchsorted(erased.ends, p, side="left"))
+    return i < len(erased) and int(erased.starts[i]) <= q
+
+
+def translate_sources(sources, p: int, q: int) -> Optional[str]:
+    """T(p, q) stitched across address-ordered content stores; None on any
+    gap (the shared Txt walk of Snapshot, StaticIndex, and TieredSnapshot —
+    erased filtering is the caller's job)."""
+    parts = []
+    expect = p
+    for content in sources:
+        lo, hi = content.span()
+        if hi < expect or lo > q:
+            continue
+        if lo > expect:
+            return None  # gap
+        t = content.translate(expect, min(q, hi))
+        if t is None:
+            return None
+        parts.append(t)
+        expect = hi + 1
+        if expect > q:
+            break
+    if expect <= q:
+        return None
+    return " ".join(parts)
+
+
+def tokens_sources(sources, p: int, q: int) -> Optional[List[str]]:
+    """Token strings over [p, q] across address-ordered content stores."""
+    out: List[str] = []
+    expect = p
+    for content in sources:
+        lo, hi = content.span()
+        if hi < expect or lo > q:
+            continue
+        if lo > expect:
+            return None
+        t = content.tokens(expect, min(q, hi))
+        if t is None:
+            return None
+        out.extend(t)
+        expect = hi + 1
+        if expect > q:
+            break
+    return out if expect > q else None
+
+
 def _filter_erased(lst: AnnotationList, erased: AnnotationList) -> AnnotationList:
     """Drop annotations whose interval intersects any erased interval."""
     if len(lst) == 0 or len(erased) == 0:
@@ -129,8 +182,10 @@ class Snapshot:
         self.segments = segments
         self._cache = cache
         self._cache_lock = cache_lock
-        er = [s.erased for s in segments]
-        self.erased = merge_lists(er) if er else AnnotationList.empty()
+        # erasure is permanent over a point-set of addresses: coalescing
+        # union, NOT minimal-interval reduction (a nested erase must never
+        # un-hide the rest of its enclosing erased range)
+        self.erased = union_intervals([s.erased for s in segments])
 
     # -- Idx ------------------------------------------------------------ #
     def annotations(self, fval: int) -> AnnotationList:
@@ -150,58 +205,18 @@ class Snapshot:
         return Term(self.annotations(fval))
 
     # -- Txt ------------------------------------------------------------ #
-    def _erased_overlaps(self, p: int, q: int) -> bool:
-        er = self.erased
-        if len(er) == 0:
-            return False
-        i = int(np.searchsorted(er.ends, p, side="left"))
-        return i < len(er) and int(er.starts[i]) <= q
+    def _sources(self):
+        return [s.content for s in self.segments if s.length]
 
     def translate(self, p: int, q: int) -> Optional[str]:
-        if self._erased_overlaps(p, q):
+        if erased_overlaps(self.erased, p, q):
             return None
-        parts = []
-        expect = p
-        for s in self.segments:
-            if s.length == 0:
-                continue
-            lo, hi = s.content.span()
-            if hi < expect or lo > q:
-                continue
-            if lo > expect:
-                return None  # gap
-            t = s.content.translate(expect, min(q, hi))
-            if t is None:
-                return None
-            parts.append(t)
-            expect = hi + 1
-            if expect > q:
-                break
-        if expect <= q:
-            return None
-        return " ".join(parts)
+        return translate_sources(self._sources(), p, q)
 
     def tokens(self, p: int, q: int) -> Optional[List[str]]:
-        if self._erased_overlaps(p, q):
+        if erased_overlaps(self.erased, p, q):
             return None
-        out: List[str] = []
-        expect = p
-        for s in self.segments:
-            if s.length == 0:
-                continue
-            lo, hi = s.content.span()
-            if hi < expect or lo > q:
-                continue
-            if lo > expect:
-                return None
-            t = s.content.tokens(expect, min(q, hi))
-            if t is None:
-                return None
-            out.extend(t)
-            expect = hi + 1
-            if expect > q:
-                break
-        return out if expect > q else None
+        return tokens_sources(self._sources(), p, q)
 
 
 # --------------------------------------------------------------------- #
@@ -269,6 +284,8 @@ class Transaction:
     def erase(self, p: int, q: int) -> None:
         """Remove content + annotations over [p, q] (reserved feature 0)."""
         self._check_open()
+        if q < p:
+            raise ValueError("erase with end < start")
         self._erase.append((p, q))
 
     # -- two-phase commit ------------------------------------------------ #
@@ -300,13 +317,20 @@ class Transaction:
             e = np.array([i[1] for i in items], dtype=np.int64)
             v = np.array([i[2] for i in items], dtype=np.float64)
             postings[fval] = reduce_minimal(s, e, v)
-        erased = (AnnotationList.from_intervals([(remap(p), remap(q))
-                                                 for p, q in self._erase])
-                  if self._erase else AnnotationList.empty())
+        if self._erase:
+            er_s = np.array([remap(p) for p, _ in self._erase], dtype=np.int64)
+            er_e = np.array([remap(q) for _, q in self._erase], dtype=np.int64)
+            erased = union_intervals([AnnotationList(
+                er_s, er_e, np.zeros(er_s.size), _checked=True)])
+        else:
+            erased = AnnotationList.empty()
 
         self._segment = Segment(seq, base, self._local_next, content,
                                 postings, erased)
-        index._log.append(self._segment.to_record())
+        rec = self._segment.to_record()
+        with index._durable_lock:       # vs. concurrent log compaction
+            index._log.append(rec)
+            index._pending[seq] = rec
         self._state = "ready"
 
     def commit(self) -> None:
@@ -315,13 +339,20 @@ class Transaction:
         if self._state != "ready":
             raise RuntimeError(f"commit in state {self._state}")
         index = self._index
-        index._log.append({"t": "commit", "seq": self._segment.seqnum})
-        index._publish(self._segment)
+        seq = self._segment.seqnum
+        with index._durable_lock:
+            index._log.append({"t": "commit", "seq": seq})
+            index._pending.pop(seq, None)
+            index._publish(self._segment)
         self._state = "committed"
+        index._maybe_auto_merge()
 
     def abort(self) -> None:
         if self._state == "ready":
-            self._index._log.append({"t": "abort", "seq": self._segment.seqnum})
+            seq = self._segment.seqnum
+            with self._index._durable_lock:
+                self._index._log.append({"t": "abort", "seq": seq})
+                self._index._pending.pop(seq, None)
         self._state = "aborted"  # address interval (if assigned) becomes a gap
 
     def _check_open(self) -> None:
@@ -335,7 +366,8 @@ class DynamicIndex:
 
     def __init__(self, tokenizer: Optional[Tokenizer] = None,
                  featurizer: Optional[Featurizer] = None,
-                 log_path: Optional[str] = None):
+                 log_path: Optional[str] = None,
+                 auto_merge_threshold: Optional[int] = None):
         self.tokenizer = tokenizer or Utf8Tokenizer()
         self.featurizer = featurizer or JsonFeaturizer()
         self._log = TransactionLog(log_path)
@@ -347,6 +379,18 @@ class DynamicIndex:
         self._publish_lock = threading.Lock()
         self._cache: dict = {}
         self._cache_lock = threading.Lock()
+        # size-tiered auto-merge: compact when the committed segment count
+        # exceeds this (None = never, the historical behavior)
+        self.auto_merge_threshold = auto_merge_threshold
+        # serializes log compaction against ready/commit/abort log appends;
+        # _pending holds readied-but-uncommitted records so a compaction
+        # never drops the durable phase-1 frame of an in-flight transaction
+        self._durable_lock = threading.RLock()
+        self._pending: Dict[int, dict] = {}
+        # merges are serialized; segments with seqnum <= _merge_fence are
+        # off-limits to merge_segments (a tiered freeze is copying them out)
+        self._merge_lock = threading.Lock()
+        self._merge_fence = -1
 
     # -- reads ----------------------------------------------------------- #
     def snapshot(self) -> Snapshot:
@@ -375,51 +419,100 @@ class DynamicIndex:
             for k in stale:
                 del self._cache[k]
 
+    def _maybe_auto_merge(self) -> None:
+        t = self.auto_merge_threshold
+        if t is not None and len(self._segments) > t:
+            self.merge_segments()
+
     # -- maintenance ------------------------------------------------------ #
     def merge_segments(self, upto: Optional[int] = None) -> None:
         """Background merge: compact committed segments into one subindex
         (paper: "warrens multiply like rabbits"), applying erases and
-        logging the compacted state."""
+        logging the compacted state.  Segments at or below the merge fence
+        (a tiered freeze in flight) are left untouched."""
+        with self._merge_lock:
+            fence = self._merge_fence
+            with self._publish_lock:
+                segs = self._segments
+            victims = [s for s in segs
+                       if (upto is None or s.seqnum <= upto)
+                       and s.seqnum > fence]
+            if len(victims) <= 1:
+                return
+            erased = union_intervals([s.erased for s in victims])
+            feats: Dict[int, List[AnnotationList]] = {}
+            for s in victims:
+                for fval, lst in s.postings.items():
+                    feats.setdefault(fval, []).append(lst)
+            postings = {f: _filter_erased(merge_lists(ls), erased)
+                        for f, ls in feats.items()}
+            postings = {f: l for f, l in postings.items() if len(l)}
+            content = ContentStore()
+            for s in sorted(victims, key=lambda s: s.base):
+                for r in s.content.records():
+                    # drop fully erased records (GC of content)
+                    if len(erased):
+                        i = int(np.searchsorted(erased.starts, r.lo,
+                                                side="right")) - 1
+                        if i >= 0 and int(erased.ends[i]) >= r.hi:
+                            continue
+                    content.add(r)
+            merged = Segment(max(s.seqnum for s in victims), 0, 0, content,
+                             postings, erased)
+            merged.length = sum(s.length for s in victims)
+            merged.base = min(s.base for s in victims)
+            with self._publish_lock:
+                keep = [s for s in self._segments if s not in victims]
+                self._segments = tuple(sorted([merged] + keep,
+                                              key=lambda s: s.seqnum))
+                self._version += 1
+                self._trim_cache()
+            self.compact_log()
+
+    def compact_log(self) -> None:
+        """Durably rewrite the log as the current committed segments plus
+        the phase-1 frames of still-in-flight (readied) transactions."""
+        with self._durable_lock:
+            with self._publish_lock:
+                segs = self._segments
+            records = []
+            for s in segs:
+                records.append(s.to_record())
+                records.append({"t": "commit", "seq": s.seqnum})
+            records.extend(self._pending.values())
+            self._log.compact(records)
+
+    # -- tiered-storage entry points -------------------------------------- #
+    def max_committed_seq(self) -> int:
+        """Largest committed seqnum (-1 when empty)."""
         with self._publish_lock:
-            segs = self._segments
-        if len(segs) <= 1:
-            return
-        victims = [s for s in segs if upto is None or s.seqnum <= upto]
-        if len(victims) <= 1:
-            return
-        erased = merge_lists([s.erased for s in victims])
-        feats: Dict[int, List[AnnotationList]] = {}
-        for s in victims:
-            for fval, lst in s.postings.items():
-                feats.setdefault(fval, []).append(lst)
-        postings = {f: _filter_erased(merge_lists(ls), erased)
-                    for f, ls in feats.items()}
-        postings = {f: l for f, l in postings.items() if len(l)}
-        content = ContentStore()
-        for s in sorted(victims, key=lambda s: s.base):
-            for r in s.content.records():
-                # drop fully erased records (GC of content)
-                if len(erased):
-                    i = int(np.searchsorted(erased.starts, r.lo, side="right")) - 1
-                    if i >= 0 and int(erased.ends[i]) >= r.hi:
-                        continue
-                content.add(r)
-        merged = Segment(max(s.seqnum for s in victims), 0, 0, content,
-                         postings, erased)
-        merged.length = sum(s.length for s in victims)
-        merged.base = min(s.base for s in victims)
+            return max((s.seqnum for s in self._segments), default=-1)
+
+    def set_merge_fence(self, seqnum: int) -> None:
+        """Exclude segments with seqnum <= ``seqnum`` from merges (a freeze
+        is copying them into a static run); -1 lifts the fence.  Waits out
+        any in-flight merge so the fenced set is stable on return."""
+        with self._merge_lock:
+            self._merge_fence = seqnum
+
+    def detach_segments(self, upto: int) -> Tuple[Segment, ...]:
+        """Freeze-at-seqnum: atomically remove committed segments with
+        seqnum <= ``upto`` from this index and return them.
+
+        Pinned snapshots keep serving their immutable segment tuples; the
+        caller owns making the detached data readable elsewhere (a static
+        run published to a manifest) *before* calling this.  The log is NOT
+        compacted here — call :meth:`compact_log` once the new tier is
+        durable, so a crash in between recovers everything from the log.
+        """
         with self._publish_lock:
-            keep = [s for s in self._segments if s not in victims]
-            self._segments = tuple(sorted([merged] + keep, key=lambda s: s.seqnum))
-            self._version += 1
-            self._trim_cache()
-        # durable compaction
-        records = []
-        for s in self._segments:
-            rec = s.to_record()
-            records.append(rec)
-            records.append({"t": "commit", "seq": s.seqnum})
-        self._log.compact(records)
+            frozen = tuple(s for s in self._segments if s.seqnum <= upto)
+            if frozen:
+                self._segments = tuple(s for s in self._segments
+                                       if s.seqnum > upto)
+                self._version += 1
+                self._trim_cache()
+        return frozen
 
     # -- recovery ---------------------------------------------------------- #
     @staticmethod

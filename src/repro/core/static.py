@@ -11,6 +11,13 @@ Reads decode one feature at a time (LRU cached) — annotation lists are
 "compressed until active".  Batch update = build a merged directory from the
 current one plus new documents, then atomic rename; a lock file enforces the
 single-transaction rule.
+
+The same layout doubles as the immutable *run* format of the tiered storage
+engine (``repro.tiered``): :func:`write_run` freezes a slice of committed
+dynamic segments into one directory (meta gains seq/addr bounds),
+:func:`merge_runs` folds several runs into one (GC'ing erased records), and
+:meth:`StaticIndex.to_segment` streams a run back into the dynamic
+``Segment`` form for resurrection.
 """
 
 from __future__ import annotations
@@ -19,16 +26,17 @@ import os
 import struct
 import threading
 from collections import OrderedDict
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import msgpack
 import numpy as np
 
 from . import codec, vbyte
-from .annotation import AnnotationList
+from .annotation import AnnotationList, merge_lists, union_intervals
 from .featurizer import Featurizer, JsonFeaturizer
 from .gcl import Term
-from .index import DynamicIndex, Snapshot
+from .index import (DynamicIndex, Segment, Snapshot, _filter_erased,
+                    erased_overlaps, tokens_sources, translate_sources)
 from .tokenizer import Tokenizer, Utf8Tokenizer
 from .txt import AppendRecord, ContentStore
 
@@ -96,22 +104,40 @@ class StaticIndex:
     def hopper(self, feature) -> Term:
         return Term(self.annotations(feature))
 
-    def _erased_overlaps(self, p: int, q: int) -> bool:
-        er = self._erased
-        if len(er) == 0:
-            return False
-        i = int(np.searchsorted(er.ends, p, side="left"))
-        return i < len(er) and int(er.starts[i]) <= q
-
     def translate(self, p: int, q: int) -> Optional[str]:
-        if self._erased_overlaps(p, q):
+        if erased_overlaps(self._erased, p, q):
             return None
-        return self._content.translate(p, q)
+        return translate_sources([self._content], p, q)
 
     def tokens(self, p: int, q: int) -> Optional[List[str]]:
-        if self._erased_overlaps(p, q):
+        if erased_overlaps(self._erased, p, q):
             return None
-        return self._content.tokens(p, q)
+        return tokens_sources([self._content], p, q)
+
+    # -- run accessors (tiered storage) --------------------------------- #
+    @property
+    def erased(self) -> AnnotationList:
+        """Persisted erased intervals (tombstones of this run)."""
+        return self._erased
+
+    @property
+    def content(self) -> ContentStore:
+        return self._content
+
+    def features(self) -> List[int]:
+        """All feature values with a stored annotation list, sorted."""
+        return sorted(self._features)
+
+    def to_segment(self, seqnum: Optional[int] = None) -> Segment:
+        """Materialize the whole run as a dynamic :class:`Segment` (loads
+        every annotation list) — the resurrection path back to the hot tier;
+        fan out to replicas via ``Segment.to_record``."""
+        postings = {f: self.annotations(f) for f in self.features()}
+        seq = seqnum if seqnum is not None else int(self.meta.get("seq_hi", 0))
+        lo = int(self.meta.get("addr_lo", 0))
+        hi = int(self.meta.get("addr_hi", -1))
+        return Segment(seq, lo, max(0, hi - lo + 1), self._content, postings,
+                       self._erased)
 
     # warren-compat helpers
     def featurize(self, feature: str) -> int:
@@ -133,13 +159,82 @@ class StaticIndex:
     def close(self) -> None:
         self._fh.close()
 
+    def __del__(self):
+        # last-resort fd cleanup: runs retired by a tiered compaction are
+        # dropped without close() once no pinned snapshot references them
+        try:
+            self._fh.close()
+        except Exception:
+            pass
+
+
+def _gc_records(records, erased: AnnotationList) -> List[dict]:
+    """Durable-form content records minus those fully covered by an erased
+    interval; partially-erased spans stay and are hidden at read time."""
+    recs = []
+    for r in records:
+        if len(erased):
+            i = int(np.searchsorted(erased.starts, r.lo, side="right")) - 1
+            if i >= 0 and int(erased.ends[i]) >= r.hi:
+                continue
+        recs.append({"lo": r.lo, "hi": r.hi, "text": r.text,
+                     "off": np.asarray(r.offsets, dtype=np.int64).tobytes(),
+                     "tok": list(r.tokens)})
+    recs.sort(key=lambda r: r["lo"])
+    return recs
+
+
+def _write_layout(directory: str, feats: Dict[int, AnnotationList],
+                  erased: AnnotationList, recs: List[dict],
+                  extra_meta: Optional[dict] = None) -> dict:
+    """Write the static layout into a build directory, then publish it with
+    an atomic rename.  Returns the meta record."""
+    build = directory + ".build"
+    os.makedirs(build, exist_ok=True)
+    offsets: Dict[int, Tuple[int, int, int]] = {}
+    with open(os.path.join(build, "postings.bin"), "wb") as fh:
+        pos = 0
+        for fval, lst in feats.items():
+            s = vbyte.encode_gaps(lst.starts)
+            e = vbyte.encode_gaps(lst.ends)
+            blob = (struct.pack("<II", len(s), len(e)) + s + e
+                    + lst.values.tobytes())
+            fh.write(blob)
+            offsets[fval] = (pos, len(blob), len(lst))
+            pos += len(blob)
+        fh.flush()
+        os.fsync(fh.fileno())
+    with open(os.path.join(build, "features.msgpack"), "wb") as fh:
+        fh.write(msgpack.packb({str(k): list(v) for k, v in offsets.items()}))
+        fh.flush()
+        os.fsync(fh.fileno())
+    with open(os.path.join(build, "content.bin"), "wb") as fh:
+        fh.write(codec.compress(msgpack.packb(recs), level=6))
+        fh.flush()
+        os.fsync(fh.fileno())
+    meta = {"n_features": len(feats), "n_records": len(recs),
+            "er_n": len(erased),
+            "er_s": vbyte.encode_gaps(erased.starts),
+            "er_e": vbyte.encode_gaps(erased.ends)}
+    meta.update(extra_meta or {})
+    with open(os.path.join(build, "meta.msgpack"), "wb") as fh:
+        fh.write(msgpack.packb(meta))
+        fh.flush()
+        os.fsync(fh.fileno())
+    if os.path.exists(directory):
+        import shutil
+        shutil.rmtree(directory + ".old", ignore_errors=True)
+        os.rename(directory, directory + ".old")
+        os.rename(build, directory)
+        shutil.rmtree(directory + ".old", ignore_errors=True)
+    else:
+        os.rename(build, directory)
+    return meta
+
 
 def write_static(snapshot_like, directory: str) -> None:
     """Freeze a DynamicIndex snapshot (or anything exposing segments) into
     the on-disk static layout."""
-    os.makedirs(directory + ".build", exist_ok=True)
-    build = directory + ".build"
-    # gather merged features
     if isinstance(snapshot_like, Snapshot):
         snap = snapshot_like
     else:
@@ -152,46 +247,82 @@ def write_static(snapshot_like, directory: str) -> None:
         lst = snap.annotations(fval)
         if len(lst):
             feats[fval] = lst
-    offsets: Dict[int, Tuple[int, int, int]] = {}
-    with open(os.path.join(build, "postings.bin"), "wb") as fh:
-        pos = 0
-        for fval, lst in feats.items():
-            s = vbyte.encode_gaps(lst.starts)
-            e = vbyte.encode_gaps(lst.ends)
-            blob = struct.pack("<II", len(s), len(e)) + s + e + lst.values.tobytes()
-            fh.write(blob)
-            offsets[fval] = (pos, len(blob), len(lst))
-            pos += len(blob)
-    with open(os.path.join(build, "features.msgpack"), "wb") as fh:
-        fh.write(msgpack.packb({str(k): list(v) for k, v in offsets.items()}))
     erased = snap.erased
-    recs = []
-    for seg in snap.segments:
-        for r in seg.content.records():
-            # GC content of fully-erased records; partially-erased spans are
-            # hidden at read time by the persisted erased list below
-            if len(erased):
-                i = int(np.searchsorted(erased.starts, r.lo,
-                                        side="right")) - 1
-                if i >= 0 and int(erased.ends[i]) >= r.hi:
-                    continue
-            recs.append({"lo": r.lo, "hi": r.hi, "text": r.text,
-                         "off": np.asarray(r.offsets, dtype=np.int64).tobytes(),
-                         "tok": list(r.tokens)})
-    recs.sort(key=lambda r: r["lo"])
-    with open(os.path.join(build, "content.bin"), "wb") as fh:
-        fh.write(codec.compress(msgpack.packb(recs), level=6))
-    with open(os.path.join(build, "meta.msgpack"), "wb") as fh:
-        fh.write(msgpack.packb({"n_features": len(feats),
-                                "n_records": len(recs),
-                                "er_n": len(erased),
-                                "er_s": vbyte.encode_gaps(erased.starts),
-                                "er_e": vbyte.encode_gaps(erased.ends)}))
-    if os.path.exists(directory):
-        import shutil
-        shutil.rmtree(directory + ".old", ignore_errors=True)
-        os.rename(directory, directory + ".old")
-        os.rename(build, directory)
-        shutil.rmtree(directory + ".old", ignore_errors=True)
-    else:
-        os.rename(build, directory)
+    recs = _gc_records([r for seg in snap.segments
+                        for r in seg.content.records()], erased)
+    _write_layout(directory, feats, erased, recs)
+
+
+def _addr_bounds(feats: Dict[int, AnnotationList], erased: AnnotationList,
+                 recs: List[dict]) -> Tuple[int, int]:
+    lows = [r["lo"] for r in recs]
+    highs = [r["hi"] for r in recs]
+    for lst in list(feats.values()) + [erased]:
+        if len(lst):
+            lows.append(int(lst.starts[0]))
+            highs.append(int(lst.ends[-1]))
+    return (min(lows), max(highs)) if lows else (0, -1)
+
+
+def write_run(segments: Sequence[Segment], directory: str) -> dict:
+    """Freeze committed dynamic segments into one immutable *run* directory
+    (the tiered storage engine's on-disk tier).
+
+    Postings are k-way merged in sequence order and filtered by the
+    segments' own erased set; fully-erased content records are GC'd;
+    partially-erased spans and erases targeting *older* runs survive as
+    tombstones in the persisted erased list, so a reader merging runs in
+    sequence order reconstructs exactly the dynamic semantics.  Returns the
+    meta record (with ``seq_lo/seq_hi/addr_lo/addr_hi`` bounds).
+    """
+    segments = sorted(segments, key=lambda s: s.seqnum)
+    if not segments:
+        raise ValueError("write_run of an empty segment set")
+    erased = union_intervals([s.erased for s in segments])
+    by_feature: Dict[int, List[AnnotationList]] = {}
+    for seg in segments:                       # sequence order: last wins
+        for fval, lst in seg.postings.items():
+            by_feature.setdefault(fval, []).append(lst)
+    feats = {f: _filter_erased(merge_lists(ls), erased)
+             for f, ls in by_feature.items()}
+    feats = {f: l for f, l in feats.items() if len(l)}
+    recs = _gc_records([r for seg in segments
+                        for r in seg.content.records()], erased)
+    addr_lo, addr_hi = _addr_bounds(feats, erased, recs)
+    return _write_layout(directory, feats, erased, recs, {
+        "seq_lo": int(segments[0].seqnum),
+        "seq_hi": int(segments[-1].seqnum),
+        "addr_lo": int(addr_lo), "addr_hi": int(addr_hi)})
+
+
+def merge_runs(run_dirs: List[str], directory: str) -> dict:
+    """Fold several runs (ascending sequence order) into one.
+
+    Erased records are GC'd against the union of the runs' tombstones; the
+    tombstones themselves are retained — annotative indexing lets *later*
+    transactions annotate erased address ranges, so a tombstone keeps
+    filtering reads forever (unlike classic LSM deletes, it can never be
+    dropped once no older run exists).  Returns the merged meta record.
+    """
+    if not run_dirs:
+        raise ValueError("merge_runs of an empty run set")
+    runs = [StaticIndex(d) for d in run_dirs]
+    try:
+        erased = union_intervals([r.erased for r in runs])
+        fvals = sorted({f for r in runs for f in r.features()})
+        feats: Dict[int, AnnotationList] = {}
+        for fval in fvals:
+            lst = _filter_erased(
+                merge_lists([r.annotations(fval) for r in runs]), erased)
+            if len(lst):
+                feats[fval] = lst
+        recs = _gc_records([rec for r in runs
+                            for rec in r.content.records()], erased)
+        addr_lo, addr_hi = _addr_bounds(feats, erased, recs)
+        return _write_layout(directory, feats, erased, recs, {
+            "seq_lo": min(int(r.meta.get("seq_lo", 0)) for r in runs),
+            "seq_hi": max(int(r.meta.get("seq_hi", 0)) for r in runs),
+            "addr_lo": int(addr_lo), "addr_hi": int(addr_hi)})
+    finally:
+        for r in runs:
+            r.close()

@@ -39,6 +39,15 @@ replicas of every group dead.
 Failed replicas re-join via ``resurrect``: the lagging replica's state is
 rebuilt by streaming the durable segment form (``Segment.to_record``) from
 a healthy sibling under the group write lock, restoring address lockstep.
+
+Cold demotion (``demote_group``): a whole replica group can be frozen into
+a static run set + manifest (``repro.tiered.demote_index``) — its replicas
+drop their in-memory segments and reads are served from the on-disk runs
+through a read-only :class:`~repro.tiered.StaticWarren`.  The first write
+touching a demoted group transparently *promotes* it back: every replica
+is rebuilt from the run set via the same ``Segment.to_record`` streams used
+for replica resurrection, restoring lockstep at the recorded address and
+sequence floors.
 """
 
 from __future__ import annotations
@@ -97,6 +106,8 @@ class ReplicaGroup:
         self.replicas = replicas
         self.alive = [True] * len(replicas)
         self.write_lock = threading.RLock()
+        self.demoted: Optional[str] = None   # run-set directory when cold
+        self.static = None                   # StaticWarren serving the runs
 
     @property
     def n_replicas(self) -> int:
@@ -120,10 +131,66 @@ class ReplicaGroup:
     def mark_failed(self, replica: int) -> None:
         self.alive[replica] = False
 
+    # -- cold demotion ----------------------------------------------- #
+    def demote(self, directory: str) -> None:
+        """Freeze this group into a static run set + manifest and drop the
+        replicas' in-memory segments; reads switch to the on-disk runs.
+        Pinned reader snapshots keep serving their old segment tuples."""
+        from repro.tiered import StaticWarren, demote_index
+
+        with self.write_lock:
+            if self.demoted is not None:
+                return
+            src = self.replicas[self.first_alive()]
+            demote_index(src, directory)
+            # publish the cold read path BEFORE wiping the replicas:
+            # lock-free readers check ``demoted`` first, so at every
+            # instant they see either the intact replicas or the runs —
+            # never an empty shard; and a StaticWarren failure here leaves
+            # the group fully hot
+            self.static = StaticWarren(directory, src.tokenizer,
+                                       src.featurizer)
+            self.demoted = directory
+            for dst in self.replicas:
+                with dst._publish_lock:
+                    dst._segments = ()
+                    dst._version += 1
+                    dst._trim_cache()
+
+    def promote(self) -> None:
+        """Resurrect a demoted group: rebuild every replica from the run
+        set (``Segment.to_record`` streams) at the recorded address and
+        sequence floors, restoring lockstep; all replicas re-join live."""
+        from repro.tiered import resurrect_index
+
+        with self.write_lock:
+            if self.demoted is None:
+                return
+            tok = self.replicas[0].tokenizer
+            feat = self.replicas[0].featurizer
+            fresh = resurrect_index(self.demoted, tok, feat,
+                                    n=len(self.replicas))
+            for dst, src in zip(self.replicas, fresh):
+                with dst._publish_lock:
+                    dst._segments = src._segments
+                    dst._version += 1
+                    dst._next_addr = src._next_addr
+                    dst._next_seq = src._next_seq
+                    dst._trim_cache()
+            self.alive = [True] * len(self.replicas)
+            # clear demoted FIRST: lock-free readers check it before
+            # dereferencing static (pinned static clones keep serving —
+            # their run file handles close when the last reference dies)
+            self.demoted = None
+            self.static = None
+
     def resurrect(self, replica: int) -> None:
         """Re-join a failed replica by streaming segments from a healthy
         sibling (durable ``Segment.to_record`` form), restoring lockstep."""
         with self.write_lock:
+            if self.demoted is not None:   # cold group: resurrect = promote
+                self.promote()
+                return
             if self.alive[replica]:
                 return
             src = self.replicas[self.first_alive()]
@@ -153,6 +220,8 @@ class _GroupTxn:
 
     def __init__(self, group: ReplicaGroup):
         self.group = group
+        if group.demoted is not None:    # first write wakes a cold group
+            group.promote()
         self.txns: Dict[int, Transaction] = {}
         self.ops: List[Tuple] = []       # replay log for late joiners
         for r in group.live():
@@ -207,6 +276,12 @@ class _GroupTxn:
         whose ready() raises are failed in place so the address space of
         the surviving replicas stays in lockstep.
         """
+        if self.group.demoted is not None:
+            # the group was demoted between this transaction opening and
+            # its commit: promote it back (restoring every replica from the
+            # run set) so phase 1 publishes onto real state, not the wiped
+            # replicas of a cold group
+            self.group.promote()
         for r in self.group.live():          # late joiners (resurrected)
             if r not in self.txns:
                 txn = self.group.replicas[r].transaction()
@@ -277,6 +352,8 @@ class _ShardedIndexView:
     def _segments(self) -> tuple:
         out = []
         for g in self._groups:
+            if g.demoted is not None:    # cold groups live on disk
+                continue
             out.extend(g.replicas[g.first_alive()]._segments)
         return tuple(out)
 
@@ -284,6 +361,8 @@ class _ShardedIndexView:
         # compaction is deterministic, so live replicas stay equivalent
         for g in self._groups:
             with g.write_lock:
+                if g.demoted is not None:  # already one compacted run set
+                    continue
                 for r in g.live():
                     g.replicas[r].merge_segments(upto)
 
@@ -295,11 +374,13 @@ class ShardedWarren:
                  tokenizer: Optional[Tokenizer] = None,
                  featurizer: Optional[Featurizer] = None,
                  log_dir: Optional[str] = None,
+                 static_dir: Optional[str] = None,
                  _shards: Optional[List[DynamicIndex]] = None,
                  _groups: Optional[List[ReplicaGroup]] = None,
                  _hooks: Optional[dict] = None):
         self.tokenizer = tokenizer or Utf8Tokenizer()
         self.featurizer = featurizer or JsonFeaturizer()
+        self.static_dir = static_dir     # default root for cold demotion
         if _groups is not None:
             self.groups = _groups
         elif _shards is not None:        # back-compat: bare index list
@@ -352,11 +433,37 @@ class ShardedWarren:
     def health(self) -> List[List[bool]]:
         return [list(g.alive) for g in self.groups]
 
+    # -- cold demotion ----------------------------------------------------- #
+    def _group_static_dir(self, group: int,
+                          directory: Optional[str]) -> str:
+        if directory is not None:
+            return directory
+        if self.static_dir is None:
+            raise ValueError("demote_group needs a directory (or construct "
+                             "the ShardedWarren with static_dir=...)")
+        return os.path.join(self.static_dir, f"group{group:02d}")
+
+    def demote_group(self, group: int,
+                     directory: Optional[str] = None) -> str:
+        """Demote a cold replica group to an on-disk static run set; reads
+        keep working (served from the runs), the next write promotes it."""
+        d = self._group_static_dir(group, directory)
+        self.groups[group].demote(d)
+        return d
+
+    def promote_group(self, group: int) -> None:
+        """Rebuild a demoted group's replicas from its static run set."""
+        self.groups[group].promote()
+
+    def demoted(self) -> List[Optional[str]]:
+        """Per group: the run-set directory when demoted, else None."""
+        return [g.demoted for g in self.groups]
+
     # -- lifecycle ------------------------------------------------------ #
     def clone(self) -> "ShardedWarren":
         return ShardedWarren(tokenizer=self.tokenizer,
                              featurizer=self.featurizer, _groups=self.groups,
-                             _hooks=self.hooks)
+                             static_dir=self.static_dir, _hooks=self.hooks)
 
     def start(self) -> None:
         if self._started:
@@ -381,6 +488,15 @@ class ShardedWarren:
         last: Optional[Exception] = None
         deadline = time.monotonic() + catchup
         while True:
+            st = group.static if group.demoted is not None else None
+            if st is not None:           # snapshot: promote() may race
+                w = st.clone()
+                w.start()
+                seq = w.max_seqnum()
+                if seq >= self._hwm[gid]:
+                    self._hwm[gid] = seq
+                    return (None, w)     # None: static, no replica number
+                w.end()                  # promote+commit+demote raced; retry
             for r in group.live():
                 w = Warren(group.replicas[r])
                 try:
@@ -558,6 +674,8 @@ class ShardedWarren:
         grp = self.groups[group]
         for _ in range(grp.n_replicas + 1):
             r, w = self._read[group]
+            if r is None:                # static read over a demoted group
+                return fn(w)
             if not grp.alive[r]:
                 self._read[group] = self._start_read(grp)
                 continue
@@ -683,10 +801,18 @@ class ShardedWarren:
     # -- fault tolerance --------------------------------------------------- #
     def checkpoint(self, manager, step: int) -> None:
         """Snapshot one live replica per group through a CheckpointManager
-        (replicas are lockstep-identical, so one copy per group suffices)."""
+        (replicas are lockstep-identical, so one copy per group suffices).
+        A demoted group is materialized transiently from its run set so the
+        checkpoint stays a complete, self-contained shard family."""
         for g, group in enumerate(self.groups):
-            src = group.replicas[group.first_alive()]
-            manager.save_index(step, src, name=f"shard{g:02d}")
+            with group.write_lock:
+                if group.demoted is not None:
+                    from repro.tiered import resurrect_index
+                    src = resurrect_index(group.demoted, self.tokenizer,
+                                          self.featurizer, n=1)[0]
+                else:
+                    src = group.replicas[group.first_alive()]
+                manager.save_index(step, src, name=f"shard{g:02d}")
 
     @staticmethod
     def restore(manager, step: int, tokenizer: Optional[Tokenizer] = None,

@@ -1,0 +1,23 @@
+"""repro.tiered — LSM-style tiered storage for the annotative index.
+
+  manifest      versioned atomic-JSON manifests with latest-good recovery
+  store         TieredStore / TieredSnapshot / TieredWarren / StaticWarren
+                + demote_index / resurrect_index (cold shard demotion)
+  compaction    background Compactor + pause-time metrics
+
+A TieredWarren exposes the exact Warren surface over a hot DynamicIndex
+memtable plus N immutable on-disk static runs; freezes and merges run in
+the background without blocking pinned readers.
+"""
+
+from .compaction import CompactionMetrics, Compactor
+from .manifest import Manifest, ManifestCorrupt, ManifestStore, RunInfo
+from .store import (StaticRun, StaticWarren, TieredSnapshot, TieredStore,
+                    TieredWarren, demote_index, resurrect_index)
+
+__all__ = [
+    "CompactionMetrics", "Compactor", "Manifest", "ManifestCorrupt",
+    "ManifestStore", "RunInfo", "StaticRun", "StaticWarren",
+    "TieredSnapshot", "TieredStore", "TieredWarren", "demote_index",
+    "resurrect_index",
+]

@@ -1,0 +1,115 @@
+"""Background compaction for the tiered store.
+
+The :class:`Compactor` runs freeze/merge maintenance on its own thread:
+
+  * when the hot tier accumulates ``freeze_segments`` committed segments
+    (or ``freeze_records`` content records), it is frozen into a new run —
+    which first triggers the hot tier's size-tiered segment auto-merge, so
+    run writes stay one-segment cheap;
+  * when the run count exceeds ``max_runs``, every run is merged into one,
+    GC'ing erased records.
+
+Readers never block: they pin a (runs, hot-snapshot) view; the only
+mutual-exclusion window is the view swap, whose duration is recorded in
+:class:`CompactionMetrics` as pause time (the LSM "write stall" figure the
+``benchmarks/build_throughput.py --tiered`` mode reports).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass
+class CompactionMetrics:
+    """Counters + pause samples, shared by manual and background paths."""
+    n_freezes: int = 0
+    n_merges: int = 0
+    pause_s: List[float] = field(default_factory=list)
+
+    def note_freeze(self, pause: float) -> None:
+        self.n_freezes += 1
+        self.pause_s.append(pause)
+
+    def note_merge(self, pause: float) -> None:
+        self.n_merges += 1
+        self.pause_s.append(pause)
+
+    @property
+    def total_pause_s(self) -> float:
+        return float(sum(self.pause_s))
+
+    @property
+    def max_pause_s(self) -> float:
+        return float(max(self.pause_s, default=0.0))
+
+    def summary(self) -> str:
+        return (f"{self.n_freezes} freezes, {self.n_merges} merges, "
+                f"pause total {1e3 * self.total_pause_s:.2f} ms, "
+                f"max {1e3 * self.max_pause_s:.3f} ms")
+
+
+class Compactor:
+    """Background freeze/merge loop over one :class:`TieredStore`."""
+
+    def __init__(self, store, freeze_segments: int = 4,
+                 freeze_records: int = 4096, max_runs: int = 4,
+                 interval_s: float = 0.05):
+        self.store = store
+        self.freeze_segments = freeze_segments
+        self.freeze_records = freeze_records
+        self.max_runs = max_runs
+        self.interval_s = interval_s
+        self._stop = threading.Event()
+        self._thread: threading.Thread = None
+
+    # -- policy ----------------------------------------------------------- #
+    def _hot_pressure(self) -> bool:
+        hot = self.store.hot
+        with hot._publish_lock:
+            segs = hot._segments
+        if len(segs) >= self.freeze_segments:
+            return True
+        return sum(len(s.content.records()) for s in segs) \
+            >= self.freeze_records
+
+    def run_once(self) -> bool:
+        """One maintenance pass; returns True when any work was done."""
+        did = False
+        if self._hot_pressure():
+            did = self.store.freeze() is not None
+        if self.store.n_runs > self.max_runs:
+            did = self.store.compact_runs() is not None or did
+        return did
+
+    # -- thread ----------------------------------------------------------- #
+    def start(self) -> "Compactor":
+        if self._thread is not None:
+            raise RuntimeError("compactor already started")
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="tiered-compactor")
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            try:
+                self.run_once()
+            except Exception:   # pragma: no cover - keep the loop alive
+                import traceback
+                traceback.print_exc()
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the thread; with ``drain`` run one final freeze+merge so the
+        on-disk state reflects everything committed."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+        if drain:
+            self.store.freeze()
+            if self.store.n_runs > self.max_runs:
+                self.store.compact_runs()

@@ -1,0 +1,179 @@
+"""Versioned manifest for the tiered storage engine.
+
+One JSON file per version (``MANIFEST-<v>.json``), written tmp + fsync +
+atomic rename — the same pattern as ``dist/checkpoint.py``.  A manifest
+records the live immutable runs (with their sequence and address-stripe
+coverage), the highest seqnum folded out of the hot tier, and the address /
+sequence allocation floors, plus a crc over its own payload so a torn write
+is detected at load time.
+
+Recovery (:meth:`ManifestStore.load_latest_good`) walks versions newest
+first and returns the first manifest that (a) parses, (b) passes its crc,
+and (c) whose run directories are all intact on disk — so a crash *between
+a run write and the manifest swap* simply falls back to the previous
+version, and the orphaned run directory is garbage-collected on the next
+open (:meth:`ManifestStore.gc`).  Readers pin a manifest version by holding
+the run tuple it described; published manifests are immutable.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import zlib
+from dataclasses import asdict, dataclass, field, replace
+from typing import Dict, List, Optional
+
+_MANIFEST_RE = re.compile(r"^MANIFEST-(\d{8})\.json$")
+
+
+@dataclass(frozen=True)
+class RunInfo:
+    """One immutable on-disk run, as recorded by the manifest."""
+    run_id: int
+    name: str            # directory name under <root>/runs/
+    seq_lo: int
+    seq_hi: int
+    addr_lo: int
+    addr_hi: int
+    n_records: int
+    n_features: int
+
+    @staticmethod
+    def from_meta(run_id: int, name: str, meta: dict) -> "RunInfo":
+        """From a ``write_run``/``merge_runs`` meta record."""
+        return RunInfo(run_id=run_id, name=name,
+                       seq_lo=int(meta["seq_lo"]), seq_hi=int(meta["seq_hi"]),
+                       addr_lo=int(meta["addr_lo"]),
+                       addr_hi=int(meta["addr_hi"]),
+                       n_records=int(meta["n_records"]),
+                       n_features=int(meta["n_features"]))
+
+
+@dataclass(frozen=True)
+class Manifest:
+    version: int
+    frozen_upto: int     # max seqnum folded into runs (-1: nothing frozen)
+    next_run_id: int
+    next_addr: int       # address-allocation floor at publish time
+    next_seq: int        # seqnum-allocation floor at publish time
+    runs: List[RunInfo] = field(default_factory=list)
+    extra: Dict = field(default_factory=dict)
+
+    @staticmethod
+    def initial() -> "Manifest":
+        return Manifest(version=0, frozen_upto=-1, next_run_id=0,
+                        next_addr=0, next_seq=0)
+
+    def successor(self, **changes) -> "Manifest":
+        return replace(self, version=self.version + 1, **changes)
+
+    # -- (de)serialization ------------------------------------------------ #
+    def to_json(self) -> str:
+        body = asdict(self)
+        payload = json.dumps(body, sort_keys=True)
+        return json.dumps({"crc": zlib.crc32(payload.encode()),
+                           "manifest": body}, sort_keys=True)
+
+    @staticmethod
+    def from_json(text: str) -> "Manifest":
+        obj = json.loads(text)
+        body = obj["manifest"]
+        payload = json.dumps(body, sort_keys=True)
+        if zlib.crc32(payload.encode()) != obj.get("crc"):
+            raise ValueError("manifest crc mismatch (torn write)")
+        runs = [RunInfo(**r) for r in body.pop("runs")]
+        return Manifest(runs=runs, **body)
+
+
+class ManifestCorrupt(RuntimeError):
+    """No manifest version on disk is intact."""
+
+
+class ManifestStore:
+    """Publishes and recovers manifest versions under one root directory."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.runs_dir = os.path.join(directory, "runs")
+        self.keep = keep
+        os.makedirs(self.runs_dir, exist_ok=True)
+        for name in os.listdir(directory):       # torn tmp files from a crash
+            if ".tmp-" in name:
+                try:
+                    os.unlink(os.path.join(directory, name))
+                except OSError:
+                    pass
+
+    def run_path(self, name: str) -> str:
+        return os.path.join(self.runs_dir, name)
+
+    def _versions(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            m = _MANIFEST_RE.match(name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def _run_intact(self, info: RunInfo) -> bool:
+        return os.path.exists(os.path.join(self.run_path(info.name),
+                                           "meta.msgpack"))
+
+    # -- recovery --------------------------------------------------------- #
+    def load_latest_good(self) -> Optional[Manifest]:
+        """Newest manifest that parses, passes crc, and names only intact
+        run directories; None when no manifest exists at all."""
+        versions = self._versions()
+        for v in reversed(versions):
+            path = os.path.join(self.directory, f"MANIFEST-{v:08d}.json")
+            try:
+                with open(path) as fh:
+                    m = Manifest.from_json(fh.read())
+            except (OSError, ValueError, KeyError, TypeError):
+                continue
+            if all(self._run_intact(r) for r in m.runs):
+                return m
+        if versions:
+            raise ManifestCorrupt(
+                f"{len(versions)} manifest versions in {self.directory}, "
+                "none intact")
+        return None
+
+    # -- publish ---------------------------------------------------------- #
+    def publish(self, manifest: Manifest) -> None:
+        """Durably write one manifest version (tmp + fsync + atomic rename),
+        then drop versions older than the retention window."""
+        final = os.path.join(self.directory,
+                             f"MANIFEST-{manifest.version:08d}.json")
+        tmp = f"{final}.tmp-{os.getpid()}"
+        with open(tmp, "w") as fh:
+            fh.write(manifest.to_json())
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, final)
+        for v in self._versions()[:-self.keep]:
+            try:
+                os.unlink(os.path.join(self.directory,
+                                       f"MANIFEST-{v:08d}.json"))
+            except OSError:
+                pass
+
+    # -- garbage collection ----------------------------------------------- #
+    def gc(self, live: Manifest) -> List[str]:
+        """Remove run directories not referenced by ``live`` (orphans from a
+        crash between run write and manifest swap, or victims of a finished
+        compaction).  Readers pinning an older manifest keep serving: a
+        run's content is resident and its postings file handle stays valid
+        after unlink (POSIX semantics)."""
+        referenced = {r.name for r in live.runs}
+        removed = []
+        for name in sorted(os.listdir(self.runs_dir)):
+            if name in referenced:
+                continue
+            path = os.path.join(self.runs_dir, name)
+            shutil.rmtree(path, ignore_errors=True)
+            removed.append(name)
+        return removed

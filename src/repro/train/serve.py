@@ -73,7 +73,15 @@ class MicroBatcher:
 
 
 class RetrievalServer:
-    """BM25 top-k over an annotative index with batched device scoring."""
+    """BM25 top-k over an annotative index with batched device scoring.
+
+    Works over any object with the Warren read surface — a single
+    ``Warren``, a ``ShardedWarren`` (with demoted cold groups), or a
+    ``TieredWarren``, whose ``annotations`` already k-way merge the hot
+    memtable with every on-disk static run, so scoring sees one logical
+    hot+cold list per term.  After commits, tier freezes, or shard
+    demotions change the collection, call :meth:`refresh_stats`.
+    """
 
     def __init__(self, warren, k: int = 10, batcher: BatcherConfig = None,
                  max_terms: int = 8, max_postings: int = 4096):
@@ -85,12 +93,22 @@ class RetrievalServer:
             self.stats = collection_stats(warren)
         self.batcher = MicroBatcher(self._handle, batcher or BatcherConfig())
 
+    def refresh_stats(self) -> None:
+        """Re-derive collection statistics from a fresh snapshot; queries
+        already in flight finish against the stats they started with.
+        Reads through a clone so it never collides with the batcher
+        thread's start()/end() bracket on the serving warren."""
+        w = self.warren.clone()
+        with w:
+            self.stats = collection_stats(w)
+
     def query(self, text: str, timeout: float = 10.0):
         return self.batcher.submit(text).get(timeout=timeout)
 
     def _handle(self, queries: List[str]) -> List[List[Tuple[int, float]]]:
+        stats = self.stats      # one coherent stats version per batch
         qn, t, l = len(queries), self.max_terms, self.max_postings
-        doc_idx = np.full((qn, t, l), self.stats.n_docs, np.int32)
+        doc_idx = np.full((qn, t, l), stats.n_docs, np.int32)
         impacts = np.zeros((qn, t, l), np.float32)
         qmask = np.zeros((qn, t), np.float32)
         with self.warren:
@@ -101,25 +119,25 @@ class RetrievalServer:
                         ranking.TF_PREFIX + ranking.porter_stem(term))
                     if not len(lst):
                         continue
-                    idf = np.log(1 + (self.stats.n_docs - len(lst) + 0.5)
+                    idf = np.log(1 + (stats.n_docs - len(lst) + 0.5)
                                  / (len(lst) + 0.5))
-                    di = np.searchsorted(self.stats.doc_starts, lst.starts)
-                    di = np.clip(di, 0, self.stats.n_docs - 1)
-                    ok = self.stats.doc_starts[di] == lst.starts
+                    di = np.searchsorted(stats.doc_starts, lst.starts)
+                    di = np.clip(di, 0, stats.n_docs - 1)
+                    ok = stats.doc_starts[di] == lst.starts
                     di, tf = di[ok][:l], lst.values[ok][:l]
-                    dl = self.stats.doc_lens[di]
+                    dl = stats.doc_lens[di]
                     imp = idf * tf * 1.9 / (tf + 0.9 * (0.6 + 0.4 * dl
-                                                        / self.stats.avgdl))
+                                                        / stats.avgdl))
                     doc_idx[qi, ti, :len(di)] = di
                     impacts[qi, ti, :len(di)] = imp
                     qmask[qi, ti] = 1.0
         scores, ids = bm25_topk(jnp.asarray(doc_idx), jnp.asarray(impacts),
                                 jnp.asarray(qmask),
-                                n_docs=self.stats.n_docs, k=self.k)
+                                n_docs=stats.n_docs, k=self.k)
         scores, ids = np.asarray(scores), np.asarray(ids)
         out = []
         for qi in range(qn):
-            res = [(int(self.stats.doc_starts[d]), float(s))
+            res = [(int(stats.doc_starts[d]), float(s))
                    for d, s in zip(ids[qi], scores[qi]) if s > 0]
             out.append(res)
         return out

@@ -106,6 +106,65 @@ def test_static_roundtrip_forced_zlib_fallback(tmp_path, monkeypatch):
     si.close()
 
 
+def test_static_snapshot_parity_hopper_phrase_over_erased(tmp_path):
+    """StaticIndex and Snapshot must agree on hopper access methods and
+    phrase solutions when erased intervals cut through the collection:
+    full-document erases, a partial mid-document erase, and probes that
+    straddle an erased boundary."""
+    idx = DynamicIndex()
+    w = Warren(idx)
+    with w:
+        w.transaction()
+        for i in range(12):
+            index_document(w, f"quick brown fox number {i} jumps high",
+                           docid=f"d{i}")
+        w.commit()
+    spans = {}
+    with w:
+        for i in range(12):
+            lst = w.annotations(f"docid:d{i}")
+            spans[i] = (int(lst.starts[0]), int(lst.ends[0]))
+    with w:
+        w.transaction()
+        w.erase(*spans[4])                       # full doc
+        w.erase(spans[7][0] + 1, spans[7][0] + 3)  # partial, mid-doc
+        w.commit()
+
+    d = str(tmp_path / "static")
+    write_static(idx, d)
+    si = StaticIndex(d)
+    snap = idx.snapshot()
+
+    for feature in ("quick", "brown", "fox", "jumps", ":", "dl:",
+                    "docid:d4", "docid:d7"):
+        fval = idx.featurizer.featurize(feature)
+        assert si.annotations(feature) == snap.annotations(fval), feature
+
+    # hopper access methods probed across the erased boundaries
+    fval = idx.featurizer.featurize("fox")
+    h_static, h_dyn = si.hopper("fox"), snap.hopper(fval)
+    probes = [spans[4][0] - 1, spans[4][0], spans[4][1],
+              spans[4][1] + 1, spans[7][0], spans[7][0] + 2, spans[7][1]]
+    for k in probes:
+        assert h_static.tau(k) == h_dyn.tau(k), k
+        assert h_static.rho(k) == h_dyn.rho(k), k
+
+    # phrase solutions: erased docs drop out identically on both sides
+    w_static, w_dyn = si.phrase("quick brown fox"), None
+    with w:
+        w_dyn = w.phrase("quick brown fox")
+        assert w_static.solutions() == w_dyn.solutions()
+        assert len(w_static.solutions()) == 10   # d4 gone; d7 phrase cut
+    # translate/tokens straddling the erased boundary: None on both sides
+    for p, q in [(spans[4][0] - 1, spans[4][0]), (spans[7][0], spans[7][1]),
+                 (spans[7][0] + 3, spans[7][0] + 4)]:
+        with w:
+            assert si.translate(p, q) is None
+            assert si.translate(p, q) == w.translate(p, q)
+            assert si.tokens(p, q) == w.tokens(p, q)
+    si.close()
+
+
 def test_static_legacy_meta_without_erased_fields(tmp_path):
     """Directories written before the erased list existed (no er_* keys in
     meta.msgpack) must load with nothing hidden."""
