@@ -16,16 +16,78 @@ import numpy as np
 
 from repro.core import (DynamicIndex, Warren, average_precision,
                         collection_stats, expand_query, index_document,
-                        score_bm25)
+                        ingest_documents, score_bm25)
 from repro.data.synth import doc_generator
+
+
+def scatter_gather_bench(warren, queries, rounds: int = 25,
+                         extra_docs: int = 0, smoke: bool = False):
+    """Same corpus, same query stream, three servings of a ShardedWarren:
+
+      legacy        the pre-async serving path: every term list is k-way
+                    merged across groups on the caller thread and scored in
+                    one global device block (ShardedWarren as "one index")
+      native/seq    scatter once per group per micro-batch, per-group
+                    device top-k, global merge — groups visited in a
+                    sequential caller-thread loop
+      native/async  the same pipeline with the per-group fan-out on the
+                    ScatterGather worker pool
+
+    Prints ms/query + the scatter/score/merge breakdown for each, verifies
+    all three return identical rankings, and reports the native/async
+    speedup over the legacy sequential scatter."""
+    from repro.train.serve import BatcherConfig, RetrievalServer
+
+    if extra_docs:                       # give each group real work
+        ingest_documents(warren, doc_generator(999, extra_docs), batch=256)
+        warren.index.merge_segments()    # serving cost, not merge state
+    qs = queries * rounds
+    results, times = {}, {}
+    for mode in ("legacy", "native/seq", "native/async"):
+        warren.set_async_scatter(mode == "native/async")
+        server = RetrievalServer(
+            warren, k=10, batcher=BatcherConfig(max_batch=16, max_wait_ms=4),
+            sharded_native=mode != "legacy")
+        for i in (1, 2, 4, 8, 16):               # warm every batch bucket
+            server._handle(qs[:i])
+        server.timings.reset()
+        t0 = time.time()
+        handles = [server.batcher.submit(q) for q in qs]
+        results[mode] = [h.get(timeout=120) for h in handles]
+        times[mode] = time.time() - t0
+        print(f"  serving [{mode:>12}]: {1e3 * times[mode] / len(qs):7.2f} "
+              f"ms/query wall — {server.timings.summary()}")
+        server.close()
+    same = all(
+        [(d, round(s, 9)) for d, s in a] == [(d, round(s, 9)) for d, s in b]
+        for mode in ("native/seq", "native/async")
+        for a, b in zip(results["legacy"], results[mode]))
+    # the per-query search path must also agree between scatter modes
+    for enabled in (False, True):
+        warren.set_async_scatter(enabled)
+        with warren:
+            hits = [warren.search(q, k=10) for q in queries]
+        same = same and (hits == results.setdefault("_search", hits))
+    speedup = times["legacy"] / times["native/async"]
+    note = (" (smoke-sized corpus: parity check only, speedup needs the "
+            "full run)" if smoke else "")
+    print(f"  all paths identical: {same}; native/async speedup over the "
+          f"legacy sequential scatter: {speedup:.2f}x{note}")
+    if not same:
+        raise SystemExit("serving paths diverged on the same corpus")
+    return speedup
 
 
 def run(n_years: int = 3, files_per_year: int = 6, docs_per_file: int = 20,
         n_queries: int = 12, n_writers: int = 4, shards: int = 1,
-        replicas: int = 1):
+        replicas: int = 1, async_scatter: bool = False, smoke: bool = False):
+    if smoke:
+        n_years, files_per_year, docs_per_file = 2, 2, 10
+        n_queries, n_writers = 4, 2
     if shards > 1 or replicas > 1:
         from repro.dist.shard_router import ShardedWarren
-        warren = ShardedWarren(n_shards=shards, replicas=replicas)
+        warren = ShardedWarren(n_shards=shards, replicas=replicas,
+                               async_scatter=async_scatter)
     else:
         warren = Warren(DynamicIndex())
     rng = np.random.default_rng(0)
@@ -153,6 +215,15 @@ def run(n_years: int = 3, files_per_year: int = 6, docs_per_file: int = 20,
         aps = by_year[y]
         print(f"  year {y}: final MAP {np.mean(aps[-len(aps)//4 or 1:]):.3f} "
               f"over {len(aps)} runs")
+    if shards > 1:
+        # sequential vs pooled scatter over the evolved corpus (plus extra
+        # synthetic docs so each group does non-trivial per-query work)
+        print("# scatter-gather serving (same corpus, fixed query set):")
+        scatter_gather_bench(
+            warren, [q["text"] for q in queries.values()],
+            rounds=2 if smoke else 25,
+            extra_docs=200 if smoke else 8000, smoke=smoke)
+        warren.close()
     return ap_log
 
 
@@ -164,8 +235,15 @@ if __name__ == "__main__":
                     help="partition the index over N shards (ShardedWarren)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="replicas per shard group (quorum commits)")
+    ap.add_argument("--async-scatter", action="store_true",
+                    help="fan per-group reads out on the ScatterGather "
+                         "worker pool (repro.dist.parallel)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny corpus + few rounds: CI-sized sanity run "
+                         "that still checks async == sequential results")
     ap.add_argument("--years", type=int, default=3)
     ap.add_argument("--writers", type=int, default=4)
     args = ap.parse_args()
     run(n_years=args.years, n_writers=args.writers, shards=args.shards,
-        replicas=args.replicas)
+        replicas=args.replicas, async_scatter=args.async_scatter,
+        smoke=args.smoke)

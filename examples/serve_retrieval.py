@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (DynamicIndex, Warren, build_block_impacts,
-                        collection_stats, index_document, score_blockmax,
+                        collection_stats, ingest_documents, score_blockmax,
                         score_bm25)
 from repro.data.synth import doc_generator
 from repro.kernels import bm25_blockmax_topk
@@ -32,6 +32,10 @@ def main():
     ap.add_argument("--replicas", type=int, default=1,
                     help="replicas per shard group (quorum commits, "
                          "read failover)")
+    ap.add_argument("--async-scatter", action="store_true",
+                    help="with --shards: fan per-group reads out on the "
+                         "ScatterGather worker pool and print the "
+                         "scatter/score/merge breakdown")
     ap.add_argument("--tiered", action="store_true",
                     help="serve through the LSM-style tiered engine "
                          "(hot memtable + on-disk runs, background "
@@ -53,7 +57,8 @@ def main():
         from repro.dist.shard_router import ShardedWarren
         tmpdir = tempfile.TemporaryDirectory()
         warren = ShardedWarren(n_shards=args.shards, replicas=args.replicas,
-                               static_dir=tmpdir.name)
+                               static_dir=tmpdir.name,
+                               async_scatter=args.async_scatter)
     elif args.tiered:
         import tempfile
 
@@ -66,16 +71,7 @@ def main():
     else:
         warren = Warren(DynamicIndex())
     t0 = time.time()
-    it = doc_generator(0, args.docs)
-    while True:
-        chunk = [d for _, d in zip(range(256), it)]
-        if not chunk:
-            break
-        with warren:
-            warren.transaction()
-            for docid, text in chunk:
-                index_document(warren, text, docid=docid)
-            warren.commit()
+    ingest_documents(warren, doc_generator(0, args.docs), batch=256)
     print(f"indexed {args.docs} docs in {time.time() - t0:.1f}s")
     if compactor is not None:
         compactor.stop(drain=True)   # hot tier -> immutable runs
@@ -93,12 +89,17 @@ def main():
         host = [score_bm25(warren, q, k=10, stats=stats) for q in queries]
         t_host = time.time() - t0
 
-    # 2. batched device serving (dynamic micro-batching server)
+    # 2. batched device serving (dynamic micro-batching server); over a
+    # ShardedWarren this is the NATIVE scatter-gather path: one fan-out per
+    # group per micro-batch, per-group device top-k, global k-way merge
     server = RetrievalServer(warren, k=10)
     t0 = time.time()
     handles = [server.batcher.submit(q) for q in queries]
     dev = [h.get(timeout=30) for h in handles]
     t_dev = time.time() - t0
+    if args.shards > 1 or args.replicas > 1:
+        print(f"sharded serving ({'async' if args.async_scatter else 'seq'} "
+              f"scatter): {server.timing_summary()}")
     server.close()
 
     # 3. block-max kernel on one query
@@ -165,6 +166,8 @@ def main():
           f"1 query)")
     if args.tiered:
         store.close()
+    if args.shards > 1 or args.replicas > 1:
+        warren.close()               # shuts the scatter pool, if any
     if tmpdir is not None:
         tmpdir.cleanup()
 

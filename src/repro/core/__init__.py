@@ -11,8 +11,8 @@ from .graph_store import GraphStore
 from .index import DynamicIndex, Segment, Snapshot, Transaction
 from .json_store import add_json, annotate_dates, render_tokens, value_of
 from .ranking import (average_precision, build_block_impacts, collection_stats,
-                      expand_query, index_document, score_blockmax, score_bm25,
-                      score_wand)
+                      expand_query, index_document, ingest_documents,
+                      score_blockmax, score_bm25, score_wand)
 from .query import parse_query, solve
 from .sparse import index_sparse_vector, score_hybrid, score_sparse
 from .static import StaticIndex, merge_runs, write_run, write_static
@@ -28,7 +28,8 @@ __all__ = [
     "both_of_all", "one_of_all", "GraphStore", "DynamicIndex", "Segment",
     "Snapshot", "Transaction", "add_json", "annotate_dates", "render_tokens",
     "value_of", "average_precision", "build_block_impacts", "collection_stats",
-    "expand_query", "index_document", "score_blockmax", "score_bm25",
+    "expand_query", "index_document", "ingest_documents", "score_blockmax",
+    "score_bm25",
     "score_wand", "StaticIndex", "write_static", "write_run", "merge_runs",
     "union_intervals", "porter_stem",
     "parse_query", "solve", "index_sparse_vector", "score_hybrid",

@@ -67,6 +67,27 @@ def index_document(txn_or_warren, text: str, docid: str = None,
     return lo, hi
 
 
+def ingest_documents(warren, docs, batch: int = 64) -> int:
+    """Index ``(docid, text)`` pairs in chunked transactions.
+
+    One transaction per chunk matters for a ShardedWarren: all appends of
+    a transaction land on one shard group (routed by the first document),
+    so chunking is what spreads a corpus across groups.  Returns the
+    number of documents ingested."""
+    n = 0
+    it = iter(docs)
+    while True:
+        chunk = [d for _, d in zip(range(batch), it)]
+        if not chunk:
+            return n
+        with warren:
+            warren.transaction()
+            for docid, text in chunk:
+                index_document(warren, text, docid=docid)
+            warren.commit()
+        n += len(chunk)
+
+
 @dataclass
 class CollectionStats:
     n_docs: int
@@ -109,6 +130,18 @@ def _impacts(lst: AnnotationList, stats: CollectionStats,
     dl = stats.doc_lens[di]
     denom = tf + k1 * (1.0 - b + b * dl / stats.avgdl)
     return di, idf * tf * (k1 + 1.0) / denom
+
+
+def _impacts_with_avgdl(lst: AnnotationList, stats: CollectionStats,
+                        idf: float, avgdl: float, k1: float = 0.9,
+                        b: float = 0.4) -> Tuple[np.ndarray, np.ndarray]:
+    """``_impacts`` with the collection's avgdl overridden — scatter-gather
+    serving scores each shard's documents against the GLOBAL average, and
+    every path sharing this helper is what keeps sharded results
+    bit-identical to the single index."""
+    local = CollectionStats(stats.n_docs, avgdl, stats.doc_starts,
+                            stats.doc_ends, stats.doc_lens)
+    return _impacts(lst, local, idf, k1, b)
 
 
 def score_bm25(snapshot_or_warren, query: str, k: int = 10,

@@ -5,6 +5,7 @@
   elastic       mesh shrink / pytree reshard on device loss
   sharding      param/batch/cache sharding policies for the meshes
   shard_router  ShardedWarren: hash-partitioned index serving
+  parallel      ScatterGather worker pool + serving time breakdown
 
 Submodules are imported lazily so that pulling in one (e.g. compression,
 jax-only) never drags the whole index stack along.
@@ -13,16 +14,22 @@ jax-only) never drags the whole index stack along.
 import importlib
 
 _SUBMODULES = ("compression", "checkpoint", "elastic", "sharding",
-               "shard_router")
+               "shard_router", "parallel")
 
-__all__ = list(_SUBMODULES) + ["ShardedWarren", "CheckpointManager"]
+_LAZY_NAMES = {
+    "ShardedWarren": "shard_router",
+    "CheckpointManager": "checkpoint",
+    "ScatterGather": "parallel",
+    "ScatterTimings": "parallel",
+}
+
+__all__ = list(_SUBMODULES) + list(_LAZY_NAMES)
 
 
 def __getattr__(name):
     if name in _SUBMODULES:
         return importlib.import_module(f".{name}", __name__)
-    if name == "ShardedWarren":
-        return importlib.import_module(".shard_router", __name__).ShardedWarren
-    if name == "CheckpointManager":
-        return importlib.import_module(".checkpoint", __name__).CheckpointManager
+    if name in _LAZY_NAMES:
+        mod = importlib.import_module(f".{_LAZY_NAMES[name]}", __name__)
+        return getattr(mod, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

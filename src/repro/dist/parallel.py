@@ -1,0 +1,133 @@
+"""Scatter-gather execution for sharded serving.
+
+:class:`ScatterGather` is a small worker pool that fans per-group read
+closures out concurrently and gathers results in group order.  It is the
+engine behind ``ShardedWarren``'s async scatter: ``annotations``,
+``global_stats``, ``search`` (both scatter phases) and ``search_gcl`` hand
+it one closure per shard group instead of looping on the caller thread.
+Each closure runs the group's full replica-failover protocol
+(``_group_read``) inside the worker, so a replica dying mid-scatter fails
+over exactly as it would on the sequential path — workers touch disjoint
+per-group state, which is what makes the fan-out safe.
+
+Error semantics: every closure is allowed to finish (so failover state
+lands consistently) and the first failure, in group order, is then
+re-raised on the caller thread.
+
+:class:`ScatterTimings` is the thread-safe scatter/score/merge time
+accumulator the serving paths report their per-query breakdown through.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+
+class ScatterTimings:
+    """Thread-safe accumulator for the serving-path time breakdown.
+
+    ``scatter``  fan-out reads (per-group stats + annotation lists)
+    ``score``    per-group packing + device/host scoring
+    ``merge``    the global k-way merge of per-group top-k lists
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.scatter_s = 0.0
+        self.score_s = 0.0
+        self.merge_s = 0.0
+        self.queries = 0
+
+    def reset(self) -> None:
+        with self._lock:
+            self.scatter_s = self.score_s = self.merge_s = 0.0
+            self.queries = 0
+
+    def add(self, scatter: float = 0.0, score: float = 0.0,
+            merge: float = 0.0, queries: int = 1) -> None:
+        with self._lock:
+            self.scatter_s += scatter
+            self.score_s += score
+            self.merge_s += merge
+            self.queries += queries
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            return {"scatter_s": self.scatter_s, "score_s": self.score_s,
+                    "merge_s": self.merge_s, "queries": self.queries}
+
+    def summary(self) -> str:
+        s = self.snapshot()
+        q = max(s["queries"], 1)
+        total = s["scatter_s"] + s["score_s"] + s["merge_s"]
+        return (f"{s['queries']} queries — scatter "
+                f"{1e3 * s['scatter_s'] / q:.2f} score "
+                f"{1e3 * s['score_s'] / q:.2f} merge "
+                f"{1e3 * s['merge_s'] / q:.2f} ms/query "
+                f"(total {1e3 * total / q:.2f})")
+
+
+class ScatterGather:
+    """Worker pool for ordered per-group fan-out.
+
+    A closed (or single-item) scatter degrades to the caller-thread loop,
+    so holders never have to guard their fan-outs on pool lifetime.
+    """
+
+    def __init__(self, workers: Optional[int] = None):
+        self.workers = workers if workers else min(16, os.cpu_count() or 4)
+        self._pool = ThreadPoolExecutor(max_workers=self.workers,
+                                        thread_name_prefix="scatter")
+        self._closed = False
+
+    def run(self, thunks: Sequence[Callable[[], Any]]) -> List[Any]:
+        """Run thunks concurrently; results in input order.
+
+        The caller thread participates (it runs the first thunk itself
+        while workers take the rest), so a fan-out never leaves the caller
+        idle and costs one fewer wakeup.  Every thunk runs to completion
+        before the first exception (in input order) is re-raised, so
+        per-group side effects — failover marks, read-warren swaps — are
+        never torn mid-scatter.
+        """
+        if self._closed or len(thunks) <= 1:
+            return [t() for t in thunks]
+        futures = []
+        for t in thunks[1:]:
+            try:
+                futures.append(self._pool.submit(t))
+            except RuntimeError:          # close() raced the fan-out: the
+                futures.append(t)         # unsubmitted tail runs inline
+        first: Optional[BaseException] = None
+        try:
+            head = thunks[0]()
+        except BaseException as e:
+            first, head = e, None
+        out: List[Any] = [head]
+        for f in futures:
+            try:
+                out.append(f() if callable(f) else f.result())
+            except BaseException as e:
+                if first is None:
+                    first = e
+                out.append(None)
+        if first is not None:
+            raise first
+        return out
+
+    def map(self, fn: Callable[[Any], Any], items: Sequence[Any]) -> List[Any]:
+        return self.run([lambda it=it: fn(it) for it in items])
+
+    def close(self) -> None:
+        self._closed = True
+        self._pool.shutdown(wait=False)
+
+    def __enter__(self) -> "ScatterGather":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False

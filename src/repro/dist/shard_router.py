@@ -36,6 +36,14 @@ own documents with the *global* BM25 parameters, and a k-way merge yields
 the global top-k — identical scores to a single index even with R-1
 replicas of every group dead.
 
+Async scatter: with ``async_scatter=True`` (or ``set_async_scatter``) the
+per-group fan-outs of ``annotations``/``global_stats``/``search``/
+``search_gcl`` run on a shared :class:`~repro.dist.parallel.ScatterGather`
+worker pool instead of a sequential caller-thread loop; per-group replica
+failover runs unchanged inside each worker, results are merged in group
+order, and ``timings`` accumulates the scatter/score/merge breakdown.
+The pool and timings are shared by every clone of the warren family.
+
 Failed replicas re-join via ``resurrect``: the lagging replica's state is
 rebuilt by streaming the durable segment form (``Segment.to_record``) from
 a healthy sibling under the group write lock, restoring address lockstep.
@@ -53,6 +61,7 @@ sequence floors.
 from __future__ import annotations
 
 import heapq
+import itertools
 import os
 import re
 import threading
@@ -62,6 +71,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import ranking
+from repro.dist.parallel import ScatterGather, ScatterTimings
 from repro.core.annotation import AnnotationList, merge_lists
 from repro.core.featurizer import Featurizer, JsonFeaturizer, murmur64a
 from repro.core.gcl import GCLNode, Phrase, Term
@@ -375,12 +385,25 @@ class ShardedWarren:
                  featurizer: Optional[Featurizer] = None,
                  log_dir: Optional[str] = None,
                  static_dir: Optional[str] = None,
+                 async_scatter: bool = False,
+                 scatter_workers: Optional[int] = None,
                  _shards: Optional[List[DynamicIndex]] = None,
                  _groups: Optional[List[ReplicaGroup]] = None,
-                 _hooks: Optional[dict] = None):
+                 _hooks: Optional[dict] = None,
+                 _shared: Optional[dict] = None):
         self.tokenizer = tokenizer or Utf8Tokenizer()
         self.featurizer = featurizer or JsonFeaturizer()
         self.static_dir = static_dir     # default root for cold demotion
+        # scatter pool + serving timings, shared by every clone so a
+        # runtime toggle or a breakdown read sees the whole family
+        if _shared is not None:
+            self._ctx = _shared
+        else:
+            self._ctx = {
+                "scatter": (ScatterGather(scatter_workers)
+                            if async_scatter else None),
+                "timings": ScatterTimings(),
+            }
         if _groups is not None:
             self.groups = _groups
         elif _shards is not None:        # back-compat: bare index list
@@ -463,7 +486,48 @@ class ShardedWarren:
     def clone(self) -> "ShardedWarren":
         return ShardedWarren(tokenizer=self.tokenizer,
                              featurizer=self.featurizer, _groups=self.groups,
-                             static_dir=self.static_dir, _hooks=self.hooks)
+                             static_dir=self.static_dir, _hooks=self.hooks,
+                             _shared=self._ctx)
+
+    # -- async scatter ----------------------------------------------------- #
+    @property
+    def async_scatter(self) -> bool:
+        return self._ctx["scatter"] is not None
+
+    @property
+    def timings(self) -> ScatterTimings:
+        """Scatter/score/merge breakdown of every ``search`` in the family."""
+        return self._ctx["timings"]
+
+    @property
+    def scatter_pool(self) -> Optional[ScatterGather]:
+        """The family's ScatterGather pool when async scatter is enabled."""
+        return self._ctx["scatter"]
+
+    def set_async_scatter(self, enabled: bool,
+                          workers: Optional[int] = None) -> None:
+        """Toggle pool-based scatter for this warren and all its clones."""
+        pool = self._ctx["scatter"]
+        if enabled and pool is None:
+            self._ctx["scatter"] = ScatterGather(workers)
+        elif not enabled and pool is not None:
+            self._ctx["scatter"] = None
+            pool.close()
+
+    def close(self) -> None:
+        """Shut down the scatter pool (reads fall back to sequential)."""
+        self.set_async_scatter(False)
+
+    def map_groups(self, fn) -> List:
+        """Apply ``fn(warren)`` to every group's serving replica, in group
+        order, with per-group replica failover; fanned out on the scatter
+        pool when async scatter is enabled, else a caller-thread loop."""
+        self._require_started()
+        pool = self._ctx["scatter"]
+        if pool is not None and self.n_shards > 1:
+            return pool.run([(lambda g=g: self._group_read(g, fn))
+                             for g in range(self.n_shards)])
+        return [self._group_read(g, fn) for g in range(self.n_shards)]
 
     def start(self) -> None:
         if self._started:
@@ -692,8 +756,7 @@ class ShardedWarren:
     def annotations(self, feature) -> AnnotationList:
         self._require_started()
         fval = feature if isinstance(feature, int) else self.featurize(feature)
-        return merge_lists([self._group_read(g, lambda w: w.annotations(fval))
-                            for g in range(self.n_shards)])
+        return merge_lists(self.map_groups(lambda w: w.annotations(fval)))
 
     def hopper(self, feature) -> Term:
         return Term(self.annotations(feature))
@@ -718,8 +781,7 @@ class ShardedWarren:
     def global_stats(self) -> ranking.CollectionStats:
         """Cross-group collection statistics (one pass, reduced)."""
         self._require_started()
-        per = [self._group_read(g, ranking.collection_stats)
-               for g in range(self.n_shards)]
+        per = self.map_groups(ranking.collection_stats)
         n_docs = sum(s.n_docs for s in per)
         total_len = sum(float(s.doc_lens.sum()) for s in per)
         avgdl = total_len / n_docs if n_docs else 1.0
@@ -738,49 +800,61 @@ class ShardedWarren:
         live replica of each group.
         """
         self._require_started()
+        t0 = time.perf_counter()
         terms = list(dict.fromkeys(ranking.ranking_tokens(query)))
         fvals = [ranking.TF_PREFIX + ranking.porter_stem(t) for t in terms]
         # scatter 1: per-group stats + term lists (one replica per group)
-        gathered = [self._group_read(
-            g, lambda w: (ranking.collection_stats(w),
-                          [w.annotations(f) for f in fvals]))
-            for g in range(self.n_shards)]
+        gathered = self.map_groups(
+            lambda w: (ranking.collection_stats(w),
+                       [w.annotations(f) for f in fvals]))
         per = [s for s, _ in gathered]
         lists = [l for _, l in gathered]
         n_docs = sum(s.n_docs for s in per)
         if n_docs == 0:
+            self.timings.add(scatter=time.perf_counter() - t0)
             return []
         total_len = sum(float(s.doc_lens.sum()) for s in per)
         avgdl = total_len / n_docs
         # reduce document frequencies
         dfs = [sum(len(lists[gi][ti]) for gi in range(self.n_shards))
                for ti in range(len(terms))]
+        t1 = time.perf_counter()
+
         # scatter 2: score each group with the GLOBAL idf/avgdl
-        per_group_topk: List[List[Tuple[float, int]]] = []
-        for gi, stats in enumerate(per):
+        def score_group(gi: int) -> List[Tuple[float, int]]:
+            stats = per[gi]
             if stats.n_docs == 0:
-                per_group_topk.append([])
-                continue
-            local = ranking.CollectionStats(stats.n_docs, avgdl,
-                                            stats.doc_starts, stats.doc_ends,
-                                            stats.doc_lens)
+                return []
             acc = np.zeros(stats.n_docs)
             for ti in range(len(terms)):
                 lst = lists[gi][ti]
                 if len(lst) == 0 or dfs[ti] == 0:
                     continue
                 idf = ranking._bm25_idf(n_docs, dfs[ti])
-                di, imp = ranking._impacts(lst, local, idf, k1, b)
+                di, imp = ranking._impacts_with_avgdl(lst, stats, idf,
+                                                      avgdl, k1, b)
                 np.add.at(acc, di, imp)
             kk = min(k, stats.n_docs)
             top = np.argpartition(-acc, kk - 1)[:kk]
-            top = top[np.argsort(-acc[top], kind="stable")]
-            per_group_topk.append(
-                [(float(acc[i]), int(stats.doc_starts[i]))
-                 for i in top if acc[i] > 0])
-        # gather: k-way merge of per-group results
-        merged = heapq.merge(*per_group_topk, key=lambda t: -t[0])
-        return [(d, s) for s, d in list(merged)[:k]]
+            # order ties by doc index (= ascending address), so every run
+            # is sorted by the merge key below
+            top = top[np.lexsort((top, -acc[top]))]
+            return [(float(acc[i]), int(stats.doc_starts[i]))
+                    for i in top if acc[i] > 0]
+
+        pool = self._ctx["scatter"]
+        if pool is not None and self.n_shards > 1:
+            per_group_topk = pool.map(score_group, range(self.n_shards))
+        else:
+            per_group_topk = [score_group(g) for g in range(self.n_shards)]
+        t2 = time.perf_counter()
+        # gather: lazy k-way merge of per-group results; ties at equal
+        # scores resolve by address, matching the single-index argsort
+        merged = heapq.merge(*per_group_topk, key=lambda t: (-t[0], t[1]))
+        out = [(d, s) for s, d in itertools.islice(merged, k)]
+        t3 = time.perf_counter()
+        self.timings.add(scatter=t1 - t0, score=t2 - t1, merge=t3 - t2)
+        return out
 
     def search_gcl(self, query_text: str, limit: int = 1000) -> List:
         """Scatter-gather structural query: solve per group, concatenate.
@@ -791,10 +865,8 @@ class ShardedWarren:
         """
         from repro.core.query import solve
         self._require_started()
-        out = []
-        for g in range(self.n_shards):
-            out.extend(self._group_read(
-                g, lambda w: solve(query_text, w, limit=limit)))
+        per = self.map_groups(lambda w: solve(query_text, w, limit=limit))
+        out = [sol for group_sols in per for sol in group_sols]
         out.sort()
         return out[:limit]
 

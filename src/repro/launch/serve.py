@@ -31,15 +31,16 @@ def serve_lm(args):
 
 
 def serve_retrieval(args):
-    from repro.core import DynamicIndex, Warren, index_document
+    from repro.core import DynamicIndex, Warren, ingest_documents
     from repro.data.synth import doc_generator
     from repro.train.serve import RetrievalServer
-    warren = Warren(DynamicIndex())
-    with warren:
-        warren.transaction()
-        for docid, text in doc_generator(0, args.docs):
-            index_document(warren, text, docid=docid)
-        warren.commit()
+    if args.shards > 1:
+        from repro.dist.shard_router import ShardedWarren
+        warren = ShardedWarren(n_shards=args.shards,
+                               async_scatter=args.async_scatter)
+    else:
+        warren = Warren(DynamicIndex())
+    ingest_documents(warren, doc_generator(0, args.docs))
     server = RetrievalServer(warren, k=10)
     queries = ["vibration conductor", "school student", "stock money"] * 8
     t0 = time.time()
@@ -48,8 +49,12 @@ def serve_retrieval(args):
     dt = time.time() - t0
     print(f"served {len(queries)} queries in {dt:.2f}s "
           f"({1e3 * dt / len(queries):.2f} ms/query, micro-batched)")
+    if args.shards > 1:
+        print(f"sharded serving breakdown: {server.timing_summary()}")
     print(f"top-3 for {queries[0]!r}: {results[0][:3]}")
     server.close()
+    if args.shards > 1:
+        warren.close()
 
 
 def main(argv=None):
@@ -58,6 +63,10 @@ def main(argv=None):
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--tokens", type=int, default=8)
     ap.add_argument("--docs", type=int, default=1000)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="retrieval mode: serve a ShardedWarren natively")
+    ap.add_argument("--async-scatter", action="store_true",
+                    help="with --shards: pool-based per-group fan-out")
     args = ap.parse_args(argv)
     if args.mode == "lm":
         serve_lm(args)

@@ -3,7 +3,12 @@
 RetrievalServer serves ranked retrieval straight from an annotative index
 (the paper's workload): queries are micro-batched, impacts are laid out in
 the block-impact format, and scoring runs through either the exhaustive
-device path or the Block-Max Pallas kernel.
+device path or the Block-Max Pallas kernel.  Over a ``ShardedWarren`` it
+serves *natively*: each micro-batch fans out once per shard group (on the
+warren's scatter pool when async scatter is enabled), every group packs its
+own ``(doc_idx, impacts, qmask)`` block with GLOBAL collection statistics,
+per-group device ``bm25_topk`` dispatches overlap the next group's packing,
+and a global k-way merge yields exactly the single-index results.
 
 LMServer wraps the transformer decode path with a KV cache and a simple
 continuous-batching slot scheduler.
@@ -12,6 +17,8 @@ continuous-batching slot scheduler.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 import queue
 import threading
 import time
@@ -23,6 +30,7 @@ import numpy as np
 
 from repro.core import collection_stats, ranking
 from repro.core.vectorized import bm25_topk
+from repro.dist.parallel import ScatterTimings
 
 
 @dataclasses.dataclass
@@ -31,8 +39,36 @@ class BatcherConfig:
     max_wait_ms: float = 2.0
 
 
+class _BatchFailure:
+    """A handler exception, boxed so waiters can tell it from a result."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+class _Handle:
+    """One request's completion slot; ``get`` re-raises handler failures."""
+
+    def __init__(self):
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+
+    def _put(self, item) -> None:
+        self._q.put(item)
+
+    def get(self, block: bool = True, timeout: Optional[float] = None):
+        res = self._q.get(block, timeout)
+        if isinstance(res, _BatchFailure):
+            raise res.exc
+        return res
+
+
 class MicroBatcher:
-    """Dynamic batching: collect up to max_batch requests or max_wait_ms."""
+    """Dynamic batching: collect up to max_batch requests or max_wait_ms.
+
+    A handler exception fails only the requests of that batch — it is
+    boxed, delivered to each waiter's handle (re-raised from ``get``), and
+    the batching loop keeps serving later requests.
+    """
 
     def __init__(self, handler: Callable[[List[Any]], List[Any]],
                  cfg: BatcherConfig):
@@ -40,12 +76,17 @@ class MicroBatcher:
         self.cfg = cfg
         self._q: "queue.Queue" = queue.Queue()
         self._stop = threading.Event()
+        self._close_lock = threading.Lock()   # orders submit vs close-drain
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
-    def submit(self, request) -> "queue.Queue":
-        done: "queue.Queue" = queue.Queue(maxsize=1)
-        self._q.put((request, done))
+    def submit(self, request) -> _Handle:
+        done = _Handle()
+        with self._close_lock:
+            if self._stop.is_set():
+                done._put(_BatchFailure(RuntimeError("MicroBatcher closed")))
+                return done
+            self._q.put((request, done))
         return done
 
     def _loop(self):
@@ -55,21 +96,42 @@ class MicroBatcher:
             except queue.Empty:
                 continue
             batch = [first]
-            deadline = time.time() + self.cfg.max_wait_ms / 1e3
+            deadline = time.monotonic() + self.cfg.max_wait_ms / 1e3
             while len(batch) < self.cfg.max_batch:
-                remaining = deadline - time.time()
+                remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     break
                 try:
                     batch.append(self._q.get(timeout=remaining))
                 except queue.Empty:
                     break
-            results = self.handler([r for r, _ in batch])
+            try:
+                results = self.handler([r for r, _ in batch])
+                if len(results) != len(batch):
+                    raise RuntimeError(
+                        f"handler returned {len(results)} results for a "
+                        f"batch of {len(batch)}")
+            except Exception as e:
+                failure = _BatchFailure(e)
+                for _, done in batch:
+                    done._put(failure)
+                continue
             for (_, done), res in zip(batch, results):
-                done.put(res)
+                done._put(res)
 
     def close(self):
-        self._stop.set()
+        """Stop the loop and promptly fail queued waiters — nobody blocks
+        out their full timeout on a closed batcher."""
+        with self._close_lock:    # no submit can slip in after the drain
+            self._stop.set()
+        self._thread.join(timeout=1.0)
+        failure = _BatchFailure(RuntimeError("MicroBatcher closed"))
+        while True:
+            try:
+                _, done = self._q.get_nowait()
+            except queue.Empty:
+                break
+            done._put(failure)
 
 
 class RetrievalServer:
@@ -81,65 +143,271 @@ class RetrievalServer:
     memtable with every on-disk static run, so scoring sees one logical
     hot+cold list per term.  After commits, tier freezes, or shard
     demotions change the collection, call :meth:`refresh_stats`.
+
+    A ``ShardedWarren`` is served natively (scatter once per group, score
+    per group, merge globally); ``timings`` holds the per-batch
+    scatter/score/merge breakdown.
     """
 
     def __init__(self, warren, k: int = 10, batcher: BatcherConfig = None,
-                 max_terms: int = 8, max_postings: int = 4096):
+                 max_terms: int = 8, max_postings: int = 4096,
+                 sharded_native: bool = True):
         self.warren = warren
         self.k = k
         self.max_terms = max_terms
         self.max_postings = max_postings
-        with warren:
-            self.stats = collection_stats(warren)
+        self._sharded = sharded_native and hasattr(warren, "map_groups")
+        self.timings = ScatterTimings()
+        if self._sharded:
+            self.stats = None    # the native path re-scatters per batch
+        else:
+            with warren:
+                self.stats = collection_stats(warren)
         self.batcher = MicroBatcher(self._handle, batcher or BatcherConfig())
 
     def refresh_stats(self) -> None:
         """Re-derive collection statistics from a fresh snapshot; queries
         already in flight finish against the stats they started with.
         Reads through a clone so it never collides with the batcher
-        thread's start()/end() bracket on the serving warren."""
+        thread's start()/end() bracket on the serving warren.  The native
+        sharded path scatters fresh stats every batch, so there is
+        nothing to refresh."""
+        if self._sharded:
+            return
         w = self.warren.clone()
         with w:
             self.stats = collection_stats(w)
+
+    def timing_summary(self) -> str:
+        return self.timings.summary()
 
     def query(self, text: str, timeout: float = 10.0):
         return self.batcher.submit(text).get(timeout=timeout)
 
     def _handle(self, queries: List[str]) -> List[List[Tuple[int, float]]]:
+        # coalesce duplicate requests: a batch scores each distinct query
+        # once, every waiter gets (a copy of) the shared result row
+        uniq = list(dict.fromkeys(queries))
+        rows = (self._handle_sharded(uniq) if self._sharded
+                else self._handle_single(uniq))
+        if len(uniq) == len(queries):
+            return rows
+        # timings count served requests, so per-query figures stay
+        # comparable with wall-clock ms/query over the same stream
+        self.timings.add(queries=len(queries) - len(uniq))
+        by_query = dict(zip(uniq, rows))
+        return [list(by_query[q]) for q in queries]
+
+    def _query_terms(self, queries: List[str]) -> List[List[str]]:
+        return [list(dict.fromkeys(ranking.ranking_tokens(q)))[:self.max_terms]
+                for q in queries]
+
+    @staticmethod
+    def _cap_by_impact(di: np.ndarray, imp: np.ndarray,
+                       limit: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Keep the top-``limit`` postings by impact (stable, so equal
+        impacts keep address order) — truncating by document order would
+        silently drop high-impact documents past the cap."""
+        if len(di) <= limit:
+            return di, imp
+        keep = np.argsort(-imp, kind="stable")[:limit]
+        return di[keep], imp[keep]
+
+    def _pad_sizes(self, qn: int, nterms: int,
+                   longest: int) -> Tuple[int, int, int]:
+        """Stable-ish device shapes: the batch and term dims bucket to
+        powers of two and the postings dim to a multiple of 256, so the
+        jitted ``bm25_topk`` compiles a bounded set of shapes instead of
+        one per (batch size, term count, longest list) — and short queries
+        don't pay for ``max_terms`` worth of padded scatter work."""
+        qp = max(1 << max(qn - 1, 0).bit_length(), 1)
+        tp = min(self.max_terms, max(1 << max(nterms - 1, 0).bit_length(), 1))
+        l = max(256, -(-longest // 256) * 256)
+        return qp, tp, min(self.max_postings, l)
+
+    def _acc_pad(self, n_docs: int) -> int:
+        """Accumulator-size bucket: a power of two ≥ max(n_docs, k), so a
+        commit changing the live document count doesn't recompile the
+        jitted scorer.  Padded slots never receive impacts, score 0, and
+        are filtered by the ``s > 0`` result guard."""
+        return 1 << max(max(n_docs, self.k) - 1, 0).bit_length()
+
+    # -- single-index path ------------------------------------------------- #
+    def _handle_single(self, queries: List[str]
+                       ) -> List[List[Tuple[int, float]]]:
         stats = self.stats      # one coherent stats version per batch
-        qn, t, l = len(queries), self.max_terms, self.max_postings
-        doc_idx = np.full((qn, t, l), stats.n_docs, np.int32)
-        impacts = np.zeros((qn, t, l), np.float32)
-        qmask = np.zeros((qn, t), np.float32)
+        qn, l_cap = len(queries), self.max_postings
+        if stats.n_docs == 0:
+            return [[] for _ in queries]
+        t0 = time.perf_counter()
+        entries: List[Tuple[int, int, np.ndarray, np.ndarray]] = []
         with self.warren:
-            for qi, text in enumerate(queries):
-                terms = list(dict.fromkeys(ranking.ranking_tokens(text)))[:t]
+            for qi, terms in enumerate(self._query_terms(queries)):
                 for ti, term in enumerate(terms):
                     lst = self.warren.annotations(
                         ranking.TF_PREFIX + ranking.porter_stem(term))
                     if not len(lst):
                         continue
-                    idf = np.log(1 + (stats.n_docs - len(lst) + 0.5)
-                                 / (len(lst) + 0.5))
-                    di = np.searchsorted(stats.doc_starts, lst.starts)
-                    di = np.clip(di, 0, stats.n_docs - 1)
-                    ok = stats.doc_starts[di] == lst.starts
-                    di, tf = di[ok][:l], lst.values[ok][:l]
-                    dl = stats.doc_lens[di]
-                    imp = idf * tf * 1.9 / (tf + 0.9 * (0.6 + 0.4 * dl
-                                                        / stats.avgdl))
-                    doc_idx[qi, ti, :len(di)] = di
-                    impacts[qi, ti, :len(di)] = imp
-                    qmask[qi, ti] = 1.0
+                    idf = ranking._bm25_idf(stats.n_docs, len(lst))
+                    di, imp = ranking._impacts(lst, stats, idf,
+                                               k1=0.9, b=0.4)
+                    di, imp = self._cap_by_impact(di, imp, l_cap)
+                    entries.append((qi, ti, di, imp))
+        t_scatter = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        qp, tp, l = self._pad_sizes(
+            qn, max((e[1] + 1 for e in entries), default=1),
+            max((len(e[2]) for e in entries), default=1))
+        nb = self._acc_pad(stats.n_docs)
+        doc_idx = np.full((qp, tp, l), nb, np.int32)
+        impacts = np.zeros((qp, tp, l), np.float32)
+        qmask = np.zeros((qp, tp), np.float32)
+        for qi, ti, di, imp in entries:
+            doc_idx[qi, ti, :len(di)] = di
+            impacts[qi, ti, :len(di)] = imp
+            qmask[qi, ti] = 1.0
         scores, ids = bm25_topk(jnp.asarray(doc_idx), jnp.asarray(impacts),
                                 jnp.asarray(qmask),
-                                n_docs=stats.n_docs, k=self.k)
+                                n_docs=nb, k=self.k)
         scores, ids = np.asarray(scores), np.asarray(ids)
+        t_score = time.perf_counter() - t0
+        t0 = time.perf_counter()
         out = []
         for qi in range(qn):
             res = [(int(stats.doc_starts[d]), float(s))
                    for d, s in zip(ids[qi], scores[qi]) if s > 0]
             out.append(res)
+        t_merge = time.perf_counter() - t0
+        self.timings.add(scatter=t_scatter, score=t_score, merge=t_merge,
+                         queries=qn)
+        return out
+
+    # -- native ShardedWarren path ----------------------------------------- #
+    def _handle_sharded(self, queries: List[str]
+                        ) -> List[List[Tuple[int, float]]]:
+        qn, l, k = len(queries), self.max_postings, self.k
+        qterms = self._query_terms(queries)
+        # stem every query term once; pack_group indexes these features
+        qfeatures = [[ranking.TF_PREFIX + ranking.porter_stem(term)
+                      for term in terms] for terms in qterms]
+        stems = list(dict.fromkeys(f for row in qfeatures for f in row))
+        n_groups = self.warren.n_shards
+        # scatter: ONE fan-out per group for the whole micro-batch — every
+        # group returns its stats and its slice of every term list
+        t0 = time.perf_counter()
+        with self.warren:
+            gathered = self.warren.map_groups(
+                lambda w: (ranking.collection_stats(w),
+                           [w.annotations(f) for f in stems]))
+        t_scatter = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        per = [s for s, _ in gathered]
+        lists = [lst for _, lst in gathered]
+        n_docs = sum(s.n_docs for s in per)
+        if n_docs == 0:
+            self.timings.add(scatter=t_scatter, queries=qn)
+            return [[] for _ in queries]
+        # global stats, computed exactly as collection_stats would over the
+        # merged surface (group-major concatenation IS address order)
+        avgdl = float(np.concatenate([s.doc_lens for s in per]).mean())
+        offsets = np.cumsum([0] + [s.n_docs for s in per])
+        # per stem: per-group (doc_idx, impact) with GLOBAL df/avgdl, then
+        # the posting cap applied to the *global* list so the kept postings
+        # are exactly the single-index path's
+        term_group: Dict[str, Optional[List[Tuple[np.ndarray, np.ndarray]]]] \
+            = {}
+        empty = (np.zeros(0, np.int64), np.zeros(0))
+        for si, f in enumerate(stems):
+            df = sum(len(lists[g][si]) for g in range(n_groups))
+            if df == 0:
+                term_group[f] = None
+                continue
+            idf = ranking._bm25_idf(n_docs, df)
+            per_g = []
+            for g in range(n_groups):
+                lst, stats = lists[g][si], per[g]
+                if len(lst) == 0 or stats.n_docs == 0:
+                    per_g.append(empty)
+                    continue
+                per_g.append(ranking._impacts_with_avgdl(lst, stats, idf,
+                                                         avgdl))
+            total = sum(len(di) for di, _ in per_g)
+            if total > l:
+                cat = np.concatenate([imp for _, imp in per_g])
+                keep = np.zeros(total, bool)
+                keep[np.argsort(-cat, kind="stable")[:l]] = True
+                capped, off = [], 0
+                for di, imp in per_g:
+                    m = keep[off:off + len(di)]
+                    off += len(di)
+                    capped.append((di[m], imp[m]))
+                per_g = capped
+            term_group[f] = per_g
+        def pack_group(g: int):
+            """This group's (doc_idx, impacts, qmask) block, or None when
+            the group has no documents or no postings for the batch."""
+            ng = per[g].n_docs
+            if ng == 0:
+                return None
+            longest = max((len(per_g[g][0]) for per_g in term_group.values()
+                           if per_g is not None), default=0)
+            if longest == 0:    # nothing scored here: all-zero rows anyway
+                return None
+            qp, tp, lg = self._pad_sizes(
+                qn, max((len(row) for row in qfeatures), default=1), longest)
+            nb = self._acc_pad(ng)
+            doc_idx = np.full((qp, tp, lg), nb, np.int32)
+            impacts = np.zeros((qp, tp, lg), np.float32)
+            qmask = np.zeros((qp, tp), np.float32)
+            for qi, row in enumerate(qfeatures):
+                for ti, f in enumerate(row):
+                    per_g = term_group[f]
+                    if per_g is None:
+                        continue
+                    qmask[qi, ti] = 1.0
+                    di, imp = per_g[g]
+                    if len(di):
+                        doc_idx[qi, ti, :len(di)] = di
+                        impacts[qi, ti, :len(di)] = imp
+            return doc_idx, impacts, qmask, nb
+
+        # pipelined scoring: jax dispatch is asynchronous, so group g's
+        # device top-k computes while group g+1's block is being packed;
+        # the np.asarray collection below blocks on all of them at once
+        pending = []
+        for g in range(n_groups):
+            blk = pack_group(g)
+            if blk is None:
+                pending.append(None)
+                continue
+            doc_idx, impacts, qmask, nb = blk
+            pending.append(bm25_topk(
+                jnp.asarray(doc_idx), jnp.asarray(impacts),
+                jnp.asarray(qmask), n_docs=nb, k=k))
+        group_res = [None if p is None
+                     else (np.asarray(p[0]), np.asarray(p[1]))
+                     for p in pending]
+        t_score = time.perf_counter() - t0
+        # gather: global k-way merge; per-group lists come out of top_k
+        # sorted by (-score, doc index), so the composite key reproduces
+        # the single-index tie order
+        t0 = time.perf_counter()
+        out = []
+        for qi in range(qn):
+            runs = []
+            for g, res in enumerate(group_res):
+                if res is None:
+                    continue
+                sc, ids = res
+                runs.append([(-float(s), int(offsets[g]) + int(d), g)
+                             for s, d in zip(sc[qi], ids[qi]) if s > 0])
+            merged = heapq.merge(*runs)   # key: (-score, global doc index)
+            row = [(int(per[g].doc_starts[gdi - offsets[g]]), -neg_s)
+                   for neg_s, gdi, g in itertools.islice(merged, k)]
+            out.append(row)
+        t_merge = time.perf_counter() - t0
+        self.timings.add(scatter=t_scatter, score=t_score, merge=t_merge,
+                         queries=qn)
         return out
 
     def close(self):
@@ -155,6 +423,7 @@ class LMServer:
         self.params = params
         self.cfg = cfg
         self.max_slots = max_slots
+        self.max_len = max_len
         self.cache = T.init_cache(cfg, max_slots, max_len)
         self.step_fn = jax.jit(lambda p, c, t: T.decode_step(p, c, t, cfg))
         self.slot_free = [True] * max_slots
@@ -164,6 +433,9 @@ class LMServer:
                  ) -> List[List[int]]:
         """Greedy-decode a batch of prompts (token-id lists)."""
         assert len(prompts) <= self.max_slots
+        # a fresh KV cache per call: decoding against a previous call's
+        # cache would attend to its keys/values and resume at its length
+        self.cache = self.T.init_cache(self.cfg, self.max_slots, self.max_len)
         outs = [[] for _ in prompts]
         # prefill by stepping prompts token by token (cache fills)
         tokens = np.zeros((self.max_slots,), np.int32)
@@ -176,8 +448,7 @@ class LMServer:
                                               jnp.asarray(tokens))
             nxt = np.asarray(jnp.argmax(logits, -1))
             for s, p in enumerate(prompts):
-                if i >= len(p) - 1:
+                if i >= len(p) - 1:       # past the prompt: greedy decode
                     outs[s].append(int(nxt[s]))
-                    if i + 1 >= len(p):
-                        tokens[s] = int(nxt[s])
+                    tokens[s] = int(nxt[s])
         return [o[:max_new] for o in outs]
