@@ -78,6 +78,145 @@ def scatter_gather_bench(warren, queries, rounds: int = 25,
     return speedup
 
 
+def rebalance_bench(shards: int = 3, replicas: int = 2,
+                    smoke: bool = False) -> None:
+    """Search latency impact of a LIVE split (and merge) under load.
+
+    Writers keep committing and searchers keep querying while group 0 is
+    split in two and the new group is merged back — all through
+    ``repro.dist.rebalance.Rebalancer``.  Reports per-phase search latency
+    (before / during / after the split), the measured writer stall (the
+    routing-table swap window, the only moment writers block), verifies
+    ZERO aborted reader transactions, and checks the final state is
+    bit-identical to a single index holding exactly the committed docs.
+    """
+    from repro.dist.rebalance import Rebalancer
+    from repro.dist.shard_router import ShardedWarren
+
+    base_docs = 300 if smoke else 2500
+    extra_per_writer = 40 if smoke else 250
+    n_writers, n_searchers = (2, 2) if smoke else (3, 3)
+    queries = ["school education student", "government law state",
+               "stock money business", "vibration conductor wind"]
+
+    warren = ShardedWarren(n_shards=shards, replicas=replicas)
+    corpus = list(doc_generator(7, base_docs, mean_len=40))
+    # small batches: every transaction's appends land on ONE group (hash of
+    # the first doc), so fine batching is what spreads mass across groups
+    ingest_documents(warren, corpus, batch=8)
+
+    errors: list = []
+    committed: list = []
+    lat: list = []                       # (timestamp, seconds)
+    stop = threading.Event()
+    lock = threading.Lock()
+
+    def writer(wid: int) -> None:
+        wc = warren.clone()
+        for i in range(extra_per_writer):
+            docid, text = f"x{wid}-{i}", corpus[(wid * 31 + i) % len(corpus)][1]
+            try:
+                with wc:
+                    wc.transaction()
+                    index_document(wc, text, docid=docid)
+                    wc.commit()
+                with lock:
+                    committed.append((docid, text))
+            except Exception as e:        # noqa: BLE001 — must not happen
+                errors.append(f"writer {docid}: {type(e).__name__}: {e}")
+                return
+
+    def searcher(sid: int) -> None:
+        wc = warren.clone()
+        i = 0
+        while not stop.is_set():
+            q = queries[(sid + i) % len(queries)]
+            i += 1
+            try:
+                t0 = time.time()
+                with wc:
+                    wc.search(q, k=10)
+                with lock:
+                    lat.append((t0, time.time() - t0))
+            except Exception as e:        # noqa: BLE001 — zero reader aborts
+                errors.append(f"searcher: {type(e).__name__}: {e}")
+                return
+
+    threads = [threading.Thread(target=writer, args=(w,))
+               for w in range(n_writers)]
+    threads += [threading.Thread(target=searcher, args=(s,))
+                for s in range(n_searchers)]
+    for t in threads:
+        t.start()
+    try:
+        time.sleep(0.3 if smoke else 1.0)    # a "before" latency window
+        # split the busiest group (whole-txn append batches skew the hash)
+        def _docs_of(g):
+            grp = warren.groups[g]
+            idx = grp.replicas[grp.first_alive()]
+            return sum(len(s.content.records()) for s in idx._segments)
+        source = max(range(warren.n_shards), key=_docs_of)
+        rb = Rebalancer(warren)
+        split_t0 = time.time()
+        new_gid = rb.split_group(source)
+        split_t1 = time.time()
+        split_stats = rb.last_stats
+        time.sleep(0.2 if smoke else 0.5)
+        rb.merge_groups(source, new_gid)
+        merge_stats = rb.last_stats
+        for t in threads[:n_writers]:
+            t.join(timeout=300)
+        time.sleep(0.2)
+    finally:
+        stop.set()
+    for t in threads[n_writers:]:
+        t.join(timeout=30)
+
+    if errors:
+        raise SystemExit(f"rebalance bench saw reader/writer failures: "
+                         f"{errors[:5]}")
+
+    def pct(xs, p):
+        if not xs:
+            return float("nan")
+        xs = sorted(xs)
+        return 1e3 * xs[min(len(xs) - 1, int(p * len(xs)))]
+
+    before = [d for ts, d in lat if ts < split_t0]
+    during = [d for ts, d in lat if split_t0 <= ts <= split_t1]
+    after = [d for ts, d in lat if ts > split_t1]
+    print(f"# live rebalance under load: {shards}x{replicas} groups, "
+          f"{len(committed)} concurrent commits, {len(lat)} searches, "
+          f"0 aborted reader transactions")
+    print(f"  split : {split_stats.summary()}")
+    print(f"  merge : {merge_stats.summary()}")
+    print(f"  search latency ms (p50/p95): "
+          f"before {pct(before, .5):.2f}/{pct(before, .95):.2f}  "
+          f"during-split {pct(during, .5):.2f}/{pct(during, .95):.2f} "
+          f"({len(during)} queries)  "
+          f"after {pct(after, .5):.2f}/{pct(after, .95):.2f}")
+    print(f"  writer stall = swap window only: split "
+          f"{1e3 * split_stats.swap_s:.2f} ms, merge "
+          f"{1e3 * merge_stats.swap_s:.2f} ms")
+
+    # parity: bit-identical to one index over exactly the committed docs
+    single = Warren(DynamicIndex())
+    ingest_documents(single, corpus, batch=128)
+    ingest_documents(single, sorted(committed), batch=1)
+    ok = True
+    with warren, single:
+        n_s = len(warren.annotations(":"))
+        n_1 = len(single.annotations(":"))
+        ok = ok and n_s == n_1
+        for q in queries:
+            got = sorted(round(s, 9) for _, s in warren.search(q, k=10))
+            ref = sorted(round(s, 9) for _, s in score_bm25(single, q, k=10))
+            ok = ok and got == ref
+    print(f"  parity with single-index oracle over {n_s} docs: {ok}")
+    if not ok:
+        raise SystemExit("rebalanced warren diverged from the oracle")
+
+
 def run(n_years: int = 3, files_per_year: int = 6, docs_per_file: int = 20,
         n_queries: int = 12, n_writers: int = 4, shards: int = 1,
         replicas: int = 1, async_scatter: bool = False, smoke: bool = False):
@@ -241,9 +380,18 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny corpus + few rounds: CI-sized sanity run "
                          "that still checks async == sequential results")
+    ap.add_argument("--rebalance-mid-run", action="store_true",
+                    help="run the live-rebalance benchmark instead: split + "
+                         "merge a replica group while writers and searchers "
+                         "run, report per-phase search latency, the writer "
+                         "stall (swap window), and oracle parity")
     ap.add_argument("--years", type=int, default=3)
     ap.add_argument("--writers", type=int, default=4)
     args = ap.parse_args()
-    run(n_years=args.years, n_writers=args.writers, shards=args.shards,
-        replicas=args.replicas, async_scatter=args.async_scatter,
-        smoke=args.smoke)
+    if args.rebalance_mid_run:
+        rebalance_bench(shards=max(args.shards, 2), replicas=args.replicas,
+                        smoke=args.smoke)
+    else:
+        run(n_years=args.years, n_writers=args.writers, shards=args.shards,
+            replicas=args.replicas, async_scatter=args.async_scatter,
+            smoke=args.smoke)

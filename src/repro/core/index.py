@@ -99,6 +99,67 @@ class Segment:
                        postings, erased)
 
 
+def partition_segment(seg: Segment, lo: int, hi: int
+                      ) -> Tuple[Optional[Segment], Optional[Segment]]:
+    """Split one committed segment at the address window [lo, hi) for shard
+    rebalancing: returns ``(inside, outside)``.
+
+    A content record belongs to the side owning its first address (records
+    never straddle a rebalance pivot — pivots are document boundaries), and
+    an annotation belongs to the side owning its *start* address — the same
+    rule cross-shard routing uses, so after a split every annotation still
+    lives in exactly one replica group.  Neither side carries erased
+    intervals: erasure is a point-set over addresses, and a tombstone may be
+    recorded in a segment that lands wholly on the other side, so the caller
+    installs the group's full tombstone union separately (an erased-carrier
+    segment) on *both* sides.  A side with no content and no postings is
+    returned as None.
+    """
+    in_content, out_content = ContentStore(), ContentStore()
+    for r in seg.content.records():
+        (in_content if lo <= r.lo < hi else out_content).add(r)
+    in_postings: Dict[int, AnnotationList] = {}
+    out_postings: Dict[int, AnnotationList] = {}
+    for fval, lst in seg.postings.items():
+        mask = (lst.starts >= lo) & (lst.starts < hi)
+        if mask.all():
+            in_postings[fval] = lst
+        elif not mask.any():
+            out_postings[fval] = lst
+        else:
+            in_postings[fval] = AnnotationList(
+                lst.starts[mask], lst.ends[mask], lst.values[mask],
+                _checked=True)
+            keep = ~mask
+            out_postings[fval] = AnnotationList(
+                lst.starts[keep], lst.ends[keep], lst.values[keep],
+                _checked=True)
+
+    def _side(content: ContentStore, postings: Dict[int, AnnotationList]
+              ) -> Optional[Segment]:
+        postings = {f: l for f, l in postings.items() if len(l)}
+        recs = content.records()
+        if not recs and not postings:
+            return None
+        if recs:
+            base = min(r.lo for r in recs)
+            length = max(r.hi for r in recs) - base + 1
+        else:
+            base, length = seg.base, 0
+        return Segment(seg.seqnum, base, length, content, postings,
+                       AnnotationList.empty())
+
+    return (_side(in_content, in_postings), _side(out_content, out_postings))
+
+
+def erased_carrier(seqnum: int, base: int,
+                   erased: AnnotationList) -> Segment:
+    """A zero-length segment holding only erased intervals — the durable
+    form of a replica group's full tombstone union after a rebalance
+    partition (see :func:`partition_segment`)."""
+    return Segment(seqnum, base, 0, ContentStore(), {}, erased)
+
+
 def erased_overlaps(erased: AnnotationList, p: int, q: int) -> bool:
     """Does [p, q] intersect any erased interval?"""
     if len(erased) == 0:

@@ -4,7 +4,10 @@
   checkpoint    atomic versioned checkpoints (train state + dynamic index)
   elastic       mesh shrink / pytree reshard on device loss
   sharding      param/batch/cache sharding policies for the meshes
-  shard_router  ShardedWarren: hash-partitioned index serving
+  shard_router  ShardedWarren: hash-partitioned index serving with a
+                versioned RoutingTable (address ranges + routing epochs)
+  rebalance     live shard rebalancing: split/merge replica groups by
+                streaming segments, without pausing writers
   parallel      ScatterGather worker pool + serving time breakdown
 
 Submodules are imported lazily so that pulling in one (e.g. compression,
@@ -14,13 +17,16 @@ jax-only) never drags the whole index stack along.
 import importlib
 
 _SUBMODULES = ("compression", "checkpoint", "elastic", "sharding",
-               "shard_router", "parallel")
+               "shard_router", "parallel", "rebalance")
 
 _LAZY_NAMES = {
     "ShardedWarren": "shard_router",
+    "RoutingTable": "shard_router",
     "CheckpointManager": "checkpoint",
     "ScatterGather": "parallel",
     "ScatterTimings": "parallel",
+    "Rebalancer": "rebalance",
+    "RebalanceStats": "rebalance",
 }
 
 __all__ = list(_SUBMODULES) + list(_LAZY_NAMES)

@@ -33,6 +33,7 @@ import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d{8})$")
 _INDEX_RE = re.compile(r"^(.+)_(\d{8})\.log$")
+_ROUTING_RE = re.compile(r"^(.+)_(\d{8})\.routing\.json$")
 
 
 class CheckpointCorrupt(RuntimeError):
@@ -178,7 +179,7 @@ class CheckpointManager:
             shutil.rmtree(os.path.join(self.directory, f"step_{step:08d}"),
                           ignore_errors=True)
             for name in os.listdir(self.directory):
-                m = _INDEX_RE.match(name)
+                m = _INDEX_RE.match(name) or _ROUTING_RE.match(name)
                 if m and int(m.group(2)) == step:
                     os.unlink(os.path.join(self.directory, name))
 
@@ -290,6 +291,49 @@ class CheckpointManager:
             idx._next_seq = first._next_seq
             replicas.append(idx)
         return replicas
+
+    # -- shard routing ------------------------------------------------- #
+    def save_routing(self, step: int, record: dict,
+                     name: str = "routing") -> str:
+        """Persist a ShardedWarren routing record (routing-table ranges,
+        epochs, write groups, per-group allocation floors) next to the
+        step's shard snapshots — tmp + fsync + atomic rename, with a crc
+        so a torn write reads as absent, not as a wrong topology."""
+        body = json.dumps(record, sort_keys=True)
+        payload = json.dumps({"crc": zlib.crc32(body.encode()),
+                              "routing": record}, sort_keys=True)
+        final = os.path.join(self.directory, f"{name}_{step:08d}.routing.json")
+        tmp = f"{final}.tmp-{os.getpid()}"
+        with open(tmp, "w") as fh:
+            fh.write(payload)
+            fh.flush()
+            os.fsync(fh.fileno())
+        with self._fs_lock:
+            os.replace(tmp, final)
+        return final
+
+    def restore_routing(self, step: int,
+                        name: str = "routing") -> Optional[dict]:
+        """The routing record saved at ``step``; None only when the file
+        is absent (a legacy checkpoint, which restores with the striped
+        default).  A present-but-torn record raises CheckpointCorrupt —
+        silently falling back to striped routing would misroute every
+        address a rebalance ever moved."""
+        path = os.path.join(self.directory, f"{name}_{step:08d}.routing.json")
+        if not os.path.exists(path):
+            return None
+        try:
+            with open(path) as fh:
+                obj = json.load(fh)
+            record = obj["routing"]
+            body = json.dumps(record, sort_keys=True)
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            raise CheckpointCorrupt(
+                f"step {step}: unreadable routing record: {e}") from e
+        if zlib.crc32(body.encode()) != obj.get("crc"):
+            raise CheckpointCorrupt(
+                f"step {step}: routing record crc mismatch (torn write)")
+        return record
 
     def index_steps(self, name: str = "index") -> List[int]:
         steps = []

@@ -1,17 +1,34 @@
-"""Elastic fault tolerance: repartition state when the device mesh changes.
+"""Elastic capacity: repartition state when the mesh or shard count changes.
 
-When a pod (or a slice of one) drops out, the scheduler hands back fewer
-devices.  Recovery is: pick a new mesh shape (``shrink_mesh``), rebuild the
-mesh (``launch.mesh.make_mesh_from_sizes``), restore the latest-good
-checkpoint, and move every pytree leaf onto its new sharding (``reshard``).
-Index shards are repartitioned the same way (``repartition_shards``): the
-surviving shard count changes, documents re-route by the same hash, so a
-ShardedWarren rebuilt with fewer shards serves identical results.
+Two distinct paths live here, for two distinct failure/scale modes:
+
+* **Offline repartition** (mesh shrink): when a pod (or a slice of one)
+  drops out, the scheduler hands back fewer devices.  Recovery is: pick a
+  new mesh shape (``shrink_mesh``), rebuild the mesh
+  (``launch.mesh.make_mesh_from_sizes``), restore the latest-good
+  checkpoint, and move every pytree leaf onto its new sharding
+  (``reshard``).  Index shards are repartitioned the same way
+  (``repartition_shards`` / ``repartition_replica_groups``): document
+  lists re-route by a stable hash and the warren is *rebuilt* — correct,
+  but the collection is offline while it happens.  This stays the right
+  tool when the serving processes themselves are gone.
+* **Live rebalance** (capacity change under load): ``split_shard_group``
+  and ``merge_shard_groups`` reshape a *running* ShardedWarren through
+  :class:`repro.dist.rebalance.Rebalancer` — segments stream to the new
+  topology in the durable ``Segment.to_record`` form while writers keep
+  committing, and the only stall is the routing-table swap.
+
+Repartition invariants: the output always has exactly ``k_new`` groups —
+a shard left unpopulated by the hash is returned as an *empty, addressable*
+group, never dropped, because group ids are positional (a missing middle
+group would shift every later group's identity).  Routing is deterministic
+(keyed blake2b over the item's repr), so repeating a repartition with the
+same inputs lands every item on the same shard.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 
@@ -64,12 +81,17 @@ def shrink_mesh(sizes: Dict[str, int], lost_devices: int,
 
 def repartition_shards(shard_docs: List[List], k_new: int,
                        route=None) -> List[List]:
-    """Redistribute per-shard item lists onto ``k_new`` shards.
+    """Redistribute per-shard item lists onto exactly ``k_new`` shards.
 
     ``route(item, k) -> shard`` defaults to stable hashing of the item's
     repr; items already on the right shard stay put (minimal movement when
-    k_new == k_old).
+    k_new == k_old).  Shards the hash leaves unpopulated (common when
+    ``k_new > k_old`` with few items) come back as empty lists — they stay
+    addressable, because shard identity is positional.  A route landing
+    outside [0, k_new) is an error, not a silent reshuffle.
     """
+    if k_new < 1:
+        raise ValueError(f"k_new must be >= 1, got {k_new}")
     if route is None:
         def route(item, k):
             import hashlib
@@ -78,7 +100,11 @@ def repartition_shards(shard_docs: List[List], k_new: int,
     out: List[List] = [[] for _ in range(k_new)]
     for items in shard_docs:
         for item in items:
-            out[route(item, k_new)].append(item)
+            shard = route(item, k_new)
+            if not 0 <= shard < k_new:
+                raise ValueError(
+                    f"route({item!r}, {k_new}) returned {shard}")
+            out[shard].append(item)
     return out
 
 
@@ -93,11 +119,38 @@ def repartition_replica_groups(group_docs: List[List], k_new: int,
     then every new group's list is fanned out to ``replicas`` copies —
     replicas always move together, a group is never split across shards.
 
-    Returns ``k_new`` groups, each a list of ``replicas`` identical item
-    lists (independent list objects, matching the independent per-replica
-    indexes they describe).
+    Returns exactly ``k_new`` groups, each a list of ``replicas`` identical
+    item lists (independent list objects, matching the independent
+    per-replica indexes they describe).  A group the hash leaves empty is
+    still returned with its ``replicas`` empty lists — dropping it would
+    renumber every later group and corrupt positional routing.
     """
     if replicas < 1:
         raise ValueError("replicas must be >= 1")
     flat = repartition_shards(group_docs, k_new, route)
+    assert len(flat) == k_new       # empty groups stay addressable
     return [[list(items) for _ in range(replicas)] for items in flat]
+
+
+# ------------------------------------------------------------------ #
+# live rebalancing (streaming, no writer pause) — see repro.dist.rebalance
+# ------------------------------------------------------------------ #
+def split_shard_group(warren, source: int, pivot: Optional[int] = None,
+                      pool=None) -> int:
+    """Split a live ShardedWarren replica group in two without pausing
+    writers; returns the new group id.  Thin wrapper over
+    :class:`repro.dist.rebalance.Rebalancer` for symmetry with the offline
+    repartition helpers above — use the Rebalancer directly to batch
+    several operations or to read the measured stall stats."""
+    from repro.dist.rebalance import Rebalancer
+
+    return Rebalancer(warren, pool=pool).split_group(source, pivot=pivot)
+
+
+def merge_shard_groups(warren, dest: int, source: int, pool=None) -> None:
+    """Fold one live replica group into another without pausing writers
+    (demoted groups merge by shipping run manifests); the absorbed group
+    is retired in place.  See :class:`repro.dist.rebalance.Rebalancer`."""
+    from repro.dist.rebalance import Rebalancer
+
+    Rebalancer(warren, pool=pool).merge_groups(dest, source)

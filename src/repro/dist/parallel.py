@@ -1,18 +1,33 @@
-"""Scatter-gather execution for sharded serving.
+"""Scatter-gather execution for sharded serving and background migration.
 
-:class:`ScatterGather` is a small worker pool that fans per-group read
-closures out concurrently and gathers results in group order.  It is the
-engine behind ``ShardedWarren``'s async scatter: ``annotations``,
-``global_stats``, ``search`` (both scatter phases) and ``search_gcl`` hand
-it one closure per shard group instead of looping on the caller thread.
-Each closure runs the group's full replica-failover protocol
-(``_group_read``) inside the worker, so a replica dying mid-scatter fails
-over exactly as it would on the sequential path — workers touch disjoint
-per-group state, which is what makes the fan-out safe.
+Semantics.  :class:`ScatterGather` is a small worker pool that fans
+per-group read closures out concurrently and gathers results in input
+order.  It is the engine behind ``ShardedWarren``'s async scatter:
+``annotations``, ``global_stats``, ``search`` (both scatter phases) and
+``search_gcl`` hand it one closure per shard group instead of looping on
+the caller thread.  Each closure runs the group's full replica-failover
+protocol (``_group_read``) inside the worker, so a replica dying
+mid-scatter fails over exactly as it would on the sequential path —
+workers touch disjoint per-group state, which is what makes the fan-out
+safe.  The same ``map`` fan-out hosts a live shard migration's bulk
+segment streaming (``repro.dist.rebalance``), so rebalancing work runs on
+pool workers rather than a serving thread.
 
-Error semantics: every closure is allowed to finish (so failover state
-lands consistently) and the first failure, in group order, is then
-re-raised on the caller thread.
+Failure model and invariants:
+
+* **Run-all-then-raise.**  ``run``/``map`` let every closure finish before
+  re-raising the *first* failure in input order — per-group side effects
+  (failover marks, read-warren re-pins) are never torn mid-scatter, and a
+  caller observing an exception knows every group reached a settled state.
+* **Caller participation.**  The caller thread executes the first closure
+  itself: a fan-out never leaves the caller idle, costs one fewer wakeup,
+  and a 1-item scatter degrades to a plain call.
+* **Close is graceful, not fatal.**  A closed pool (or a ``close`` racing
+  a fan-out) degrades to the caller-thread loop — holders never need to
+  guard fan-outs on pool lifetime, and no submitted work is dropped.
+* **No ordering between items.**  Closures of one fan-out may run in any
+  order and concurrently; correctness must come from the closures touching
+  disjoint state (per-group reads do; anything else must lock).
 
 :class:`ScatterTimings` is the thread-safe scatter/score/merge time
 accumulator the serving paths report their per-query breakdown through.

@@ -1,18 +1,35 @@
 """ShardedWarren: hash-partitioned, replicated serving over K shard groups.
 
 Each *logical shard* is a :class:`ReplicaGroup` of R lockstep
-:class:`DynamicIndex` replicas, all owning the same disjoint *address
-stripe* (group g allocates permanent addresses in [g*STRIPE, (g+1)*STRIPE)),
-so a global address names its owning group — reads route by ``addr //
-STRIPE`` and committed cross-shard annotations just work.
+:class:`DynamicIndex` replicas.  Which group owns which committed address
+is decided by a versioned :class:`RoutingTable`: a sorted set of disjoint
+address ranges, each tagged with its owning group.  A fresh warren starts
+with the classic striped table (group g owns [g*STRIPE, (g+1)*STRIPE)), and
+live rebalancing (:mod:`repro.dist.rebalance`) publishes successor tables —
+splitting one group's range at a document boundary, retagging a merged
+group's ranges, granting fresh stripes for new allocations — each with a
+monotonically increasing *epoch*.
+
+Routing epochs and read consistency: every read session (``start``) pins
+ONE table version and one read warren per group, and accepts the pinned set
+only if each group's ``epoch`` matches what the table expects — a
+rebalance bumps the group epoch *before* rewriting replica state and
+publishes the successor table *after*, so a session can never pair a
+post-swap group state with a pre-swap table (or vice versa).  Pinned
+sessions keep serving their immutable snapshots across a swap; the next
+``start`` (or a mid-session failover that trips the epoch check) re-pins
+against the current table.  Session reads stay monotonic: the per-group
+seqnum high-water mark is keyed by (group, epoch) and the swap only
+publishes once the destination holds everything the source committed.
 
 Write path: a ShardedWarren transaction fans out into per-group
 transactions, opened lazily; inside a group every live replica stages the
 same operations, so deterministic transaction building keeps replicas in
 address lockstep.  All *appends* of one transaction land on one group
-(chosen by hashing the first appended document), which keeps the
-transaction's staging-address space consistent; annotations and erases on
-committed addresses route to their owners.  Commit is a two-phase *quorum*
+(chosen by hashing the first appended document over the table's
+``write_groups``), which keeps the transaction's staging-address space
+consistent; annotations and erases on committed addresses route to their
+owners through the *current* table.  Commit is a two-phase *quorum*
 commit across the touched groups: phase 1 durably readies the transaction
 on every live replica of every group, holding each group's write lock in
 ascending group order (no deadlocks, and a replica can never be resurrected
@@ -20,21 +37,21 @@ mid-window) — if any group readies fewer than ⌈(R+1)/2⌉ replicas the whole
 cross-shard transaction aborts cleanly (:class:`QuorumError`); phase 2
 publishes on every readied replica that is still live.  A replica whose
 ready/commit raises is failed in place (fail-stop) so the survivors stay
-consistent.
+consistent.  A transaction staged against a group that a rebalance rewrote
+before phase 1 is *re-staged*, not lost: the warren keeps the logical op
+list and transparently replays it against the current topology
+(:class:`RouteEpochError` is internal retry fuel, surfaced only if the
+topology refuses to settle).
 
 Read path: the class exposes the exact Warren surface (start/end/
 transaction/annotations/hopper/translate/phrase/…) by k-way merging
 per-group annotation lists served from the *first live replica* of each
 group, with automatic failover to a sibling when a replica is marked failed
-(or raises :class:`ReplicaFailure`).  Sessions get *monotonic reads*: each
-clone tracks the highest segment seqnum it has served per group, and a
-failover target must have caught up to it — since per-group commits are
-serialized, a mid-publish failover can never un-see a committed
-transaction.  ``search`` is the scatter-gather fast
+(or raises :class:`ReplicaFailure`).  ``search`` is the scatter-gather fast
 path: global collection statistics are reduced first, each group scores its
 own documents with the *global* BM25 parameters, and a k-way merge yields
 the global top-k — identical scores to a single index even with R-1
-replicas of every group dead.
+replicas of every group dead, before or after any number of rebalances.
 
 Async scatter: with ``async_scatter=True`` (or ``set_async_scatter``) the
 per-group fan-outs of ``annotations``/``global_stats``/``search``/
@@ -42,7 +59,8 @@ per-group fan-outs of ``annotations``/``global_stats``/``search``/
 worker pool instead of a sequential caller-thread loop; per-group replica
 failover runs unchanged inside each worker, results are merged in group
 order, and ``timings`` accumulates the scatter/score/merge breakdown.
-The pool and timings are shared by every clone of the warren family.
+The pool, the timings, and the routing table are shared by every clone of
+the warren family.
 
 Failed replicas re-join via ``resurrect``: the lagging replica's state is
 rebuilt by streaming the durable segment form (``Segment.to_record``) from
@@ -52,14 +70,15 @@ Cold demotion (``demote_group``): a whole replica group can be frozen into
 a static run set + manifest (``repro.tiered.demote_index``) — its replicas
 drop their in-memory segments and reads are served from the on-disk runs
 through a read-only :class:`~repro.tiered.StaticWarren`.  The first write
-touching a demoted group transparently *promotes* it back: every replica
-is rebuilt from the run set via the same ``Segment.to_record`` streams used
-for replica resurrection, restoring lockstep at the recorded address and
-sequence floors.
+touching a demoted group transparently *promotes* it back.  A group merged
+away by a rebalance is *retired*: it stays addressable (health, checkpoint,
+resurrect all keep working) but owns no address range, takes no appends,
+and serves empty reads — so group ids stay dense and stable forever.
 """
 
 from __future__ import annotations
 
+import bisect
 import heapq
 import itertools
 import os
@@ -83,7 +102,9 @@ STRIPE = 1 << 44          # address stripe per shard group (>> any index size)
 
 
 def shard_of(addr: int) -> int:
-    """Owning shard group of a committed (non-negative) address."""
+    """Owning shard group of a committed address under the *striped*
+    layout (addr // STRIPE) — exact for any warren that has never been
+    rebalanced; rebalanced warrens route through their RoutingTable."""
     return int(addr) // STRIPE
 
 
@@ -101,14 +122,124 @@ class QuorumError(RuntimeError):
     whole cross-shard transaction was aborted cleanly (nothing published)."""
 
 
+class RouteEpochError(RuntimeError):
+    """A transaction was staged against a group that a rebalance rewrote
+    before phase 1 could run.  ``ShardedWarren.commit``/``ready`` catch
+    this internally and transparently re-stage the logical op list against
+    the current routing table; it surfaces only when the topology keeps
+    changing faster than the retry budget."""
+
+    def __init__(self, group: int):
+        super().__init__(f"shard group {group}: routing epoch changed "
+                         "under a staged transaction")
+        self.group = group
+
+
+class _RouteEpochChanged(Exception):
+    """Internal reader-side signal: the pinned table went stale mid-read;
+    the session refreshes its view and retries the operation."""
+
+
+# --------------------------------------------------------------------- #
+class RoutingTable:
+    """Immutable, versioned map from address ranges to shard groups.
+
+    ``ranges``        sorted disjoint ``(lo, hi, gid)`` triples (hi exclusive)
+    ``write_groups``  gids that accept appends (retired groups drop out)
+    ``group_epochs``  per-gid expected :class:`ReplicaGroup` epoch — the
+                      handshake that keeps read sessions consistent across
+                      a rebalance swap (see module docstring)
+    ``epoch``         monotonic table version; bumped by every successor
+    """
+
+    __slots__ = ("epoch", "ranges", "write_groups", "group_epochs", "_los")
+
+    def __init__(self, epoch: int, ranges: Tuple[Tuple[int, int, int], ...],
+                 write_groups: Tuple[int, ...],
+                 group_epochs: Tuple[int, ...]):
+        rs = tuple(sorted(tuple(r) for r in ranges))
+        for (alo, ahi, _), (blo, _, _) in zip(rs, rs[1:]):
+            if blo < ahi:
+                raise ValueError("routing ranges overlap")
+        if not write_groups:
+            raise ValueError("routing table with no writable group")
+        self.epoch = epoch
+        self.ranges = rs
+        self.write_groups = tuple(write_groups)
+        self.group_epochs = tuple(group_epochs)
+        self._los = [r[0] for r in rs]
+
+    @staticmethod
+    def striped(n_groups: int) -> "RoutingTable":
+        """The initial layout: group g owns [g*STRIPE, (g+1)*STRIPE)."""
+        return RoutingTable(
+            0, tuple((g * STRIPE, (g + 1) * STRIPE, g)
+                     for g in range(n_groups)),
+            tuple(range(n_groups)), (0,) * n_groups)
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.group_epochs)
+
+    def owner(self, addr: int) -> Optional[int]:
+        """gid owning ``addr``, or None when no range covers it."""
+        i = bisect.bisect_right(self._los, int(addr)) - 1
+        if i < 0:
+            return None
+        lo, hi, gid = self.ranges[i]
+        return gid if addr < hi else None
+
+    def range_containing(self, addr: int) -> Optional[Tuple[int, int, int]]:
+        i = bisect.bisect_right(self._los, int(addr)) - 1
+        if i >= 0 and addr < self.ranges[i][1]:
+            return self.ranges[i]
+        return None
+
+    def ranges_of(self, gid: int) -> List[Tuple[int, int]]:
+        return [(lo, hi) for lo, hi, g in self.ranges if g == gid]
+
+    def fresh_stripe(self) -> Tuple[int, int]:
+        """An untouched stripe above every routed range (new allocations
+        after a split land here, so address spaces never collide)."""
+        top = max((hi for _, hi, _ in self.ranges), default=0)
+        lo = -(-top // STRIPE) * STRIPE
+        return (lo, lo + STRIPE)
+
+    def successor(self, ranges=None, write_groups=None,
+                  group_epochs=None) -> "RoutingTable":
+        return RoutingTable(
+            self.epoch + 1,
+            tuple(ranges) if ranges is not None else self.ranges,
+            tuple(write_groups) if write_groups is not None
+            else self.write_groups,
+            tuple(group_epochs) if group_epochs is not None
+            else self.group_epochs)
+
+    # -- durable form (checkpointing) ----------------------------------- #
+    def to_record(self) -> dict:
+        return {"epoch": self.epoch,
+                "ranges": [list(r) for r in self.ranges],
+                "write_groups": list(self.write_groups),
+                "group_epochs": list(self.group_epochs)}
+
+    @staticmethod
+    def from_record(rec: dict) -> "RoutingTable":
+        return RoutingTable(int(rec["epoch"]),
+                            tuple(tuple(r) for r in rec["ranges"]),
+                            tuple(rec["write_groups"]),
+                            tuple(rec["group_epochs"]))
+
+
 # --------------------------------------------------------------------- #
 class ReplicaGroup:
     """R lockstep DynamicIndex replicas of one logical shard.
 
     ``alive`` is the fail-stop health vector shared by every clone of the
     owning ShardedWarren.  ``write_lock`` serializes phase-1+2 of quorum
-    commits against each other and against ``resurrect`` — readers never
-    take it.
+    commits against each other, against ``resurrect``, and against the
+    rebalancer's swap window — readers never take it.  ``epoch`` counts
+    rebalance rewrites of this group's state (splits trim it, merges grow
+    or retire it); it is the group half of the RoutingTable handshake.
     """
 
     def __init__(self, group_id: int, replicas: List[DynamicIndex]):
@@ -116,6 +247,8 @@ class ReplicaGroup:
         self.replicas = replicas
         self.alive = [True] * len(replicas)
         self.write_lock = threading.RLock()
+        self.epoch = 0
+        self.retired = False                 # merged away: empty, addressable
         self.demoted: Optional[str] = None   # run-set directory when cold
         self.static = None                   # StaticWarren serving the runs
 
@@ -151,6 +284,9 @@ class ReplicaGroup:
         with self.write_lock:
             if self.demoted is not None:
                 return
+            if self.retired:
+                raise ValueError(
+                    f"shard group {self.group_id} is retired (merged away)")
             src = self.replicas[self.first_alive()]
             demote_index(src, directory)
             # publish the cold read path BEFORE wiping the replicas:
@@ -225,13 +361,17 @@ class _GroupTxn:
     Staging is per-replica (negative addresses, no side effects until
     ready), so replicas that die mid-transaction are simply skipped and
     replicas resurrected mid-transaction catch up by replaying the staged
-    operation list at phase 1 — both without breaking lockstep.
+    operation list at phase 1 — both without breaking lockstep.  The
+    group's rebalance epoch is captured at open; phase 1 refuses to ready
+    onto a group the rebalancer rewrote in between (RouteEpochError — the
+    warren re-stages the whole transaction against the new topology).
     """
 
     def __init__(self, group: ReplicaGroup):
         self.group = group
         if group.demoted is not None:    # first write wakes a cold group
             group.promote()
+        self.epoch0 = group.epoch
         self.txns: Dict[int, Transaction] = {}
         self.ops: List[Tuple] = []       # replay log for late joiners
         for r in group.live():
@@ -286,6 +426,8 @@ class _GroupTxn:
         whose ready() raises are failed in place so the address space of
         the surviving replicas stays in lockstep.
         """
+        if self.group.epoch != self.epoch0:
+            raise RouteEpochError(self.group.group_id)
         if self.group.demoted is not None:
             # the group was demoted between this transaction opening and
             # its commit: promote it back (restoring every replica from the
@@ -362,7 +504,7 @@ class _ShardedIndexView:
     def _segments(self) -> tuple:
         out = []
         for g in self._groups:
-            if g.demoted is not None:    # cold groups live on disk
+            if g.demoted is not None or g.retired:  # cold/retired: no hot segs
                 continue
             out.extend(g.replicas[g.first_alive()]._segments)
         return tuple(out)
@@ -371,7 +513,7 @@ class _ShardedIndexView:
         # compaction is deterministic, so live replicas stay equivalent
         for g in self._groups:
             with g.write_lock:
-                if g.demoted is not None:  # already one compacted run set
+                if g.demoted is not None or g.retired:
                     continue
                 for r in g.live():
                     g.replicas[r].merge_segments(upto)
@@ -389,21 +531,12 @@ class ShardedWarren:
                  scatter_workers: Optional[int] = None,
                  _shards: Optional[List[DynamicIndex]] = None,
                  _groups: Optional[List[ReplicaGroup]] = None,
+                 _table: Optional[RoutingTable] = None,
                  _hooks: Optional[dict] = None,
                  _shared: Optional[dict] = None):
         self.tokenizer = tokenizer or Utf8Tokenizer()
         self.featurizer = featurizer or JsonFeaturizer()
         self.static_dir = static_dir     # default root for cold demotion
-        # scatter pool + serving timings, shared by every clone so a
-        # runtime toggle or a breakdown read sees the whole family
-        if _shared is not None:
-            self._ctx = _shared
-        else:
-            self._ctx = {
-                "scatter": (ScatterGather(scatter_workers)
-                            if async_scatter else None),
-                "timings": ScatterTimings(),
-            }
         if _groups is not None:
             self.groups = _groups
         elif _shards is not None:        # back-compat: bare index list
@@ -423,22 +556,35 @@ class ShardedWarren:
                     idx._next_addr = g * STRIPE
                     reps.append(idx)
                 self.groups.append(ReplicaGroup(g, reps))
-        self.n_shards = len(self.groups)
-        self.replicas = max(g.n_replicas for g in self.groups)
-        # primaries, for callers that want one index per logical shard
-        self.shards = [g.replicas[0] for g in self.groups]
+        # scatter pool + serving timings + the routing table, shared by
+        # every clone so a runtime toggle, a breakdown read, or a rebalance
+        # swap is seen by the whole family
+        if _shared is not None:
+            self._ctx = _shared
+        else:
+            self._ctx = {
+                "scatter": (ScatterGather(scatter_workers)
+                            if async_scatter else None),
+                "timings": ScatterTimings(),
+                "table": _table or RoutingTable.striped(len(self.groups)),
+                "rebalance_lock": threading.Lock(),
+            }
         self.index = _ShardedIndexView(self.groups, self.tokenizer,
                                        self.featurizer)
         # test/ops hooks, shared across clones:
         #   "on_ready"(group_id, replica)  — phase 1, before each ready()
         #   "mid_commit"(warren, group_id) — between phase 1 and phase 2
+        #   "mid_migration"(warren, stage, group_id) — rebalance checkpoints
         self.hooks: dict = _hooks if _hooks is not None else {}
         self._started = False
-        self._read: List[Tuple[int, Warren]] = []    # per group: (replica, warren)
+        self._table: Optional[RoutingTable] = None   # pinned per session
+        self._read: Dict[int, Tuple[Optional[int], Warren]] = {}
         # monotonic session reads: highest segment seqnum this clone has
-        # served per group; failover never steps behind it
-        self._hwm: List[int] = [-1] * self.n_shards
+        # served per group, keyed by the group epoch it was observed under;
+        # failover never steps behind it
+        self._hwm: Dict[int, Tuple[int, int]] = {}
         self._txn_open: Dict[int, _GroupTxn] = {}    # group -> fan-out txn
+        self._txn_ops: List[Tuple] = []              # logical op replay log
         self._txn_active = False
         self._txn_ready = False
         self._held: List[int] = []                   # group locks held
@@ -483,6 +629,24 @@ class ShardedWarren:
         return [g.demoted for g in self.groups]
 
     # -- lifecycle ------------------------------------------------------ #
+    @property
+    def n_shards(self) -> int:
+        return len(self.groups)
+
+    @property
+    def replicas(self) -> int:
+        return max(g.n_replicas for g in self.groups)
+
+    @property
+    def shards(self) -> List[DynamicIndex]:
+        """Primary replica per group (callers wanting one index per shard)."""
+        return [g.replicas[0] for g in self.groups]
+
+    @property
+    def routing(self) -> RoutingTable:
+        """The family's CURRENT routing table (sessions pin their own)."""
+        return self._ctx["table"]
+
     def clone(self) -> "ShardedWarren":
         return ShardedWarren(tokenizer=self.tokenizer,
                              featurizer=self.featurizer, _groups=self.groups,
@@ -520,23 +684,77 @@ class ShardedWarren:
 
     def map_groups(self, fn) -> List:
         """Apply ``fn(warren)`` to every group's serving replica, in group
-        order, with per-group replica failover; fanned out on the scatter
-        pool when async scatter is enabled, else a caller-thread loop."""
+        order of this session's pinned routing table, with per-group replica
+        failover; fanned out on the scatter pool when async scatter is
+        enabled, else a caller-thread loop.  If a rebalance swap lands
+        mid-fan-out, the session refreshes its pinned view and retries —
+        readers are never aborted by a topology change."""
         self._require_started()
-        pool = self._ctx["scatter"]
-        if pool is not None and self.n_shards > 1:
-            return pool.run([(lambda g=g: self._group_read(g, fn))
-                             for g in range(self.n_shards)])
-        return [self._group_read(g, fn) for g in range(self.n_shards)]
+        for _ in range(8):
+            table = self._table
+            gids = range(table.n_groups)
+            pool = self._ctx["scatter"]
+            try:
+                if pool is not None and table.n_groups > 1:
+                    return pool.run([(lambda g=g: self._group_read(g, fn))
+                                     for g in gids])
+                return [self._group_read(g, fn) for g in gids]
+            except _RouteEpochChanged:
+                self._refresh_view()
+        raise ReplicaFailure("routing table kept changing mid-read")
 
     def start(self) -> None:
         if self._started:
             raise RuntimeError("already started")
-        self._read = [self._start_read(g) for g in self.groups]
+        self._pin_view()
         self._started = True
 
+    def _pin_view(self, settle: float = 5.0) -> None:
+        """Pin (table, per-group read warren) pairs that agree on every
+        group's epoch.  The rebalancer bumps a group's epoch before
+        rewriting its state and publishes the successor table after, so a
+        full set of matching pins is a consistent cut of the family."""
+        deadline = time.monotonic() + settle
+        while True:
+            table = self._ctx["table"]
+            read: Dict[int, Tuple[Optional[int], Warren]] = {}
+            ok = True
+            try:
+                for gid in range(table.n_groups):
+                    grp = self.groups[gid]
+                    if grp.epoch != table.group_epochs[gid]:
+                        ok = False
+                        break
+                    read[gid] = self._start_read(grp)
+                    if grp.epoch != table.group_epochs[gid]:
+                        ok = False
+                        break
+            except Exception:
+                for _, w in read.values():
+                    w.end()
+                raise
+            if ok and self._ctx["table"] is table:
+                self._table, self._read = table, read
+                return
+            for _, w in read.values():
+                w.end()
+            if time.monotonic() > deadline:
+                raise ReplicaFailure(
+                    "routing table swap did not settle within the pin window")
+            time.sleep(0.0005)
+
+    def _refresh_view(self) -> None:
+        """Drop the pinned view and re-pin against the current table (used
+        when a failover trips over a rebalance swap mid-session).  Data
+        monotonicity is preserved: a swap only publishes once its successor
+        state holds every commit the session may have observed."""
+        for _, w in self._read.values():
+            w.end()
+        self._read = {}
+        self._pin_view()
+
     def _start_read(self, group: ReplicaGroup,
-                    catchup: float = 2.0) -> Tuple[int, Warren]:
+                    catchup: float = 2.0) -> Tuple[Optional[int], Warren]:
         """Start a read warren on a live replica whose snapshot has caught
         up to this clone's high-water seqnum for the group.
 
@@ -546,9 +764,15 @@ class ShardedWarren:
         transaction this session has already observed (monotonic session
         reads — failover mid-publish can never step backwards).  A replica
         still publishing catches up within the commit window, hence the
-        brief bounded wait.
+        brief bounded wait.  The mark is keyed by the group's rebalance
+        epoch: a rebalance renumbers or re-homes segments, but only ever
+        publishes supersets of the committed data, so resetting the mark at
+        an epoch boundary keeps session reads monotonic in *data*.
         """
         gid = group.group_id
+        epoch = group.epoch
+        got = self._hwm.get(gid)
+        floor = got[1] if got is not None and got[0] == epoch else -1
         last: Optional[Exception] = None
         deadline = time.monotonic() + catchup
         while True:
@@ -557,8 +781,8 @@ class ShardedWarren:
                 w = st.clone()
                 w.start()
                 seq = w.max_seqnum()
-                if seq >= self._hwm[gid]:
-                    self._hwm[gid] = seq
+                if seq >= floor:
+                    self._hwm[gid] = (epoch, seq)
                     return (None, w)     # None: static, no replica number
                 w.end()                  # promote+commit+demote raced; retry
             for r in group.live():
@@ -571,8 +795,8 @@ class ShardedWarren:
                     continue
                 seq = max((s.seqnum for s in w._snapshot.segments),
                           default=-1)
-                if seq >= self._hwm[gid]:
-                    self._hwm[gid] = seq
+                if seq >= floor:
+                    self._hwm[gid] = (epoch, seq)
                     return (r, w)
                 w.end()                  # stale: publish in flight; retry
             if not group.live():
@@ -581,13 +805,14 @@ class ShardedWarren:
             if time.monotonic() > deadline:
                 raise ReplicaFailure(
                     f"shard group {gid}: no live replica caught up to "
-                    f"seq {self._hwm[gid]}")
+                    f"seq {floor}")
             time.sleep(0.0005)
 
     def end(self) -> None:
-        for _, w in self._read:
+        for _, w in self._read.values():
             w.end()
-        self._read = []
+        self._read = {}
+        self._table = None
         self._started = False
 
     def __enter__(self) -> "ShardedWarren":
@@ -609,6 +834,7 @@ class ShardedWarren:
 
     def _reset_txn(self) -> None:
         self._txn_open = {}
+        self._txn_ops = []
         self._txn_active = False
         self._txn_ready = False
         self._append_shard = None
@@ -629,11 +855,16 @@ class ShardedWarren:
             if self._append_shard is None:
                 raise RuntimeError("staging address with no appends")
             return self._append_shard
-        return shard_of(p)
+        gid = self._ctx["table"].owner(p)
+        if gid is None:
+            raise ValueError(f"address {p} is outside every routed range")
+        return gid
 
     def append(self, text: str) -> Tuple[int, int]:
         if self._append_shard is None:
-            self._append_shard = route_text(text, self.n_shards)
+            wg = self._ctx["table"].write_groups
+            self._append_shard = wg[route_text(text, len(wg))]
+        self._txn_ops.append(("append", text))
         return self._txn_group(self._append_shard).append(text)
 
     def annotate(self, feature, p: int, q: int, v: float = 0.0,
@@ -641,9 +872,11 @@ class ShardedWarren:
         group = self._route_addr(p)
         if v_is_address and v < 0 and group != self._append_shard:
             raise ValueError("staging-valued annotation on a foreign shard")
+        self._txn_ops.append(("annotate", feature, p, q, v, v_is_address))
         self._txn_group(group).annotate(feature, p, q, v, v_is_address)
 
     def erase(self, p: int, q: int) -> None:
+        self._txn_ops.append(("erase", p, q))
         self._txn_group(self._route_addr(p)).erase(p, q)
 
     # -- two-phase quorum commit ------------------------------------------ #
@@ -668,6 +901,41 @@ class ShardedWarren:
                     f"shard group {g}: {ok}/{gt.group.n_replicas} replicas "
                     f"ready, quorum is {gt.group.quorum}")
 
+    def _restage(self) -> None:
+        """Re-stage the logical op list against the current routing table
+        after a rebalance rewrote a touched group (staging addresses only
+        depend on op order, so the replay reproduces them exactly)."""
+        ops = self._txn_ops
+        for gt in self._txn_open.values():
+            gt.abort()
+        self._release_locks()
+        self._txn_open = {}
+        self._txn_ops = []
+        self._append_shard = None
+        for op in ops:
+            if op[0] == "append":
+                self.append(op[1])
+            elif op[0] == "annotate":
+                self.annotate(*op[1:])
+            else:
+                self.erase(*op[1:])
+
+    def _ready_with_restage(self) -> None:
+        """Acquire locks + phase 1, transparently re-staging (bounded) when
+        a rebalance swap rewrote a touched group under the staged txn."""
+        for _ in range(4):
+            self._acquire_locks()
+            try:
+                self._phase1()
+                return
+            except RouteEpochError:
+                self._restage()          # releases the locks; retry
+            except Exception:
+                self._abort_locked()
+                raise
+        self._abort_locked()
+        raise RouteEpochError(-1)
+
     def ready(self) -> None:
         """Phase 1 now; the group write locks stay held until commit()/
         abort() so replicas cannot drift between the phases."""
@@ -675,12 +943,7 @@ class ShardedWarren:
             raise RuntimeError("no active transaction")
         if self._txn_ready:
             raise RuntimeError("transaction already readied")
-        self._acquire_locks()
-        try:
-            self._phase1()
-        except Exception:
-            self._abort_locked()
-            raise
+        self._ready_with_restage()
         self._txn_ready = True
 
     def commit(self):
@@ -690,12 +953,7 @@ class ShardedWarren:
         if not self._txn_active:
             raise RuntimeError("no active transaction")
         if not self._txn_ready:
-            self._acquire_locks()
-            try:
-                self._phase1()
-            except Exception:
-                self._abort_locked()
-                raise
+            self._ready_with_restage()
         mid = self.hooks.get("mid_commit")
         if mid is not None:
             for g in sorted(self._txn_open):
@@ -731,6 +989,16 @@ class ShardedWarren:
         self._reset_txn()
 
     # -- reads (merged across groups, replica failover) -------------------- #
+    def _repin(self, group: int) -> None:
+        """Re-pin one group's read warren mid-session, unless the pinned
+        table went stale under a rebalance (then the whole view refreshes)."""
+        grp = self.groups[group]
+        if grp.epoch != self._table.group_epochs[group]:
+            raise _RouteEpochChanged()
+        self._read[group] = self._start_read(grp)
+        if grp.epoch != self._table.group_epochs[group]:
+            raise _RouteEpochChanged()
+
     def _group_read(self, group: int, fn):
         """Run ``fn(warren)`` on the group's serving replica, failing over
         to a live sibling when the replica was marked failed or raises
@@ -741,14 +1009,28 @@ class ShardedWarren:
             if r is None:                # static read over a demoted group
                 return fn(w)
             if not grp.alive[r]:
-                self._read[group] = self._start_read(grp)
+                self._repin(group)
                 continue
             try:
                 return fn(w)
             except ReplicaFailure:
                 grp.mark_failed(r)
-                self._read[group] = self._start_read(grp)
+                self._repin(group)
         raise ReplicaFailure(f"shard group {group}: failover exhausted")
+
+    def _routed_read(self, p: int, fn):
+        """Point read on the group owning address ``p`` (session table),
+        refreshing the view when a rebalance swap lands mid-read."""
+        self._require_started()
+        for _ in range(8):
+            gid = self._table.owner(p)
+            if gid is None:
+                return None
+            try:
+                return self._group_read(gid, fn)
+            except _RouteEpochChanged:
+                self._refresh_view()
+        raise ReplicaFailure("routing table kept changing mid-read")
 
     def featurize(self, feature: str) -> int:
         return self.featurizer.featurize(feature)
@@ -762,12 +1044,10 @@ class ShardedWarren:
         return Term(self.annotations(feature))
 
     def translate(self, p: int, q: int) -> Optional[str]:
-        self._require_started()
-        return self._group_read(shard_of(p), lambda w: w.translate(p, q))
+        return self._routed_read(p, lambda w: w.translate(p, q))
 
     def tokens(self, p: int, q: int) -> Optional[List[str]]:
-        self._require_started()
-        return self._group_read(shard_of(p), lambda w: w.tokens(p, q))
+        return self._routed_read(p, lambda w: w.tokens(p, q))
 
     def phrase(self, text: str) -> GCLNode:
         self._require_started()
@@ -779,17 +1059,24 @@ class ShardedWarren:
 
     # -- scatter-gather serving ------------------------------------------- #
     def global_stats(self) -> ranking.CollectionStats:
-        """Cross-group collection statistics (one pass, reduced)."""
+        """Cross-group collection statistics (one pass, reduced).
+
+        Concatenated per-group vectors are re-sorted by document start
+        address: group order stops matching address order once a rebalance
+        has split or merged ranges, and downstream scoring binary-searches
+        ``doc_starts``."""
         self._require_started()
         per = self.map_groups(ranking.collection_stats)
         n_docs = sum(s.n_docs for s in per)
         total_len = sum(float(s.doc_lens.sum()) for s in per)
         avgdl = total_len / n_docs if n_docs else 1.0
-        return ranking.CollectionStats(
-            n_docs, avgdl,
-            np.concatenate([s.doc_starts for s in per]),
-            np.concatenate([s.doc_ends for s in per]),
-            np.concatenate([s.doc_lens for s in per]))
+        starts = np.concatenate([s.doc_starts for s in per])
+        ends = np.concatenate([s.doc_ends for s in per])
+        lens = np.concatenate([s.doc_lens for s in per])
+        if len(starts) and not np.all(starts[:-1] <= starts[1:]):
+            order = np.argsort(starts, kind="stable")
+            starts, ends, lens = starts[order], ends[order], lens[order]
+        return ranking.CollectionStats(n_docs, avgdl, starts, ends, lens)
 
     def search(self, query: str, k: int = 10, k1: float = 0.9,
                b: float = 0.4) -> List[Tuple[int, float]]:
@@ -797,7 +1084,7 @@ class ShardedWarren:
 
         Global document frequencies and avgdl make per-group scores exactly
         the single-index scores, so the merged top-k is exact — from any
-        live replica of each group.
+        live replica of each group, before or after any rebalance.
         """
         self._require_started()
         t0 = time.perf_counter()
@@ -809,6 +1096,7 @@ class ShardedWarren:
                        [w.annotations(f) for f in fvals]))
         per = [s for s, _ in gathered]
         lists = [l for _, l in gathered]
+        n_groups = len(gathered)
         n_docs = sum(s.n_docs for s in per)
         if n_docs == 0:
             self.timings.add(scatter=time.perf_counter() - t0)
@@ -816,7 +1104,7 @@ class ShardedWarren:
         total_len = sum(float(s.doc_lens.sum()) for s in per)
         avgdl = total_len / n_docs
         # reduce document frequencies
-        dfs = [sum(len(lists[gi][ti]) for gi in range(self.n_shards))
+        dfs = [sum(len(lists[gi][ti]) for gi in range(n_groups))
                for ti in range(len(terms))]
         t1 = time.perf_counter()
 
@@ -843,10 +1131,10 @@ class ShardedWarren:
                     for i in top if acc[i] > 0]
 
         pool = self._ctx["scatter"]
-        if pool is not None and self.n_shards > 1:
-            per_group_topk = pool.map(score_group, range(self.n_shards))
+        if pool is not None and n_groups > 1:
+            per_group_topk = pool.map(score_group, range(n_groups))
         else:
-            per_group_topk = [score_group(g) for g in range(self.n_shards)]
+            per_group_topk = [score_group(g) for g in range(n_groups)]
         t2 = time.perf_counter()
         # gather: lazy k-way merge of per-group results; ties at equal
         # scores resolve by address, matching the single-index argsort
@@ -859,9 +1147,9 @@ class ShardedWarren:
     def search_gcl(self, query_text: str, limit: int = 1000) -> List:
         """Scatter-gather structural query: solve per group, concatenate.
 
-        Exact when query solutions don't cross shard stripes — true for any
-        query over intra-document structure, since a document lives wholly
-        inside one group.
+        Exact when query solutions don't cross group boundaries — true for
+        any query over intra-document structure, since a document lives
+        wholly inside one group (rebalance pivots are document boundaries).
         """
         from repro.core.query import solve
         self._require_started()
@@ -873,18 +1161,40 @@ class ShardedWarren:
     # -- fault tolerance --------------------------------------------------- #
     def checkpoint(self, manager, step: int) -> None:
         """Snapshot one live replica per group through a CheckpointManager
-        (replicas are lockstep-identical, so one copy per group suffices).
-        A demoted group is materialized transiently from its run set so the
-        checkpoint stays a complete, self-contained shard family."""
-        for g, group in enumerate(self.groups):
-            with group.write_lock:
-                if group.demoted is not None:
-                    from repro.tiered import resurrect_index
-                    src = resurrect_index(group.demoted, self.tokenizer,
-                                          self.featurizer, n=1)[0]
-                else:
-                    src = group.replicas[group.first_alive()]
-                manager.save_index(step, src, name=f"shard{g:02d}")
+        (replicas are lockstep-identical, so one copy per group suffices),
+        plus the routing table and per-group allocation floors.  A demoted
+        group is materialized transiently from its run set so the
+        checkpoint stays a complete, self-contained shard family.  Retired
+        groups checkpoint as empty snapshots — they stay addressable.
+        Consistency: the snapshot loop runs under the family's rebalance
+        lock (a split/merge landing between two group snapshots would tear
+        the checkpoint across two topologies) AND under every group's
+        write lock at once, acquired in ascending order — the same
+        discipline quorum commits use — so a cross-shard transaction can
+        never be half-captured (its annotations in one group's snapshot,
+        the content they reference missing from another's)."""
+        with self._ctx["rebalance_lock"]:
+            for group in self.groups:          # ascending id order
+                group.write_lock.acquire()
+            try:
+                floors = []
+                for g, group in enumerate(self.groups):
+                    if group.demoted is not None:
+                        from repro.tiered import resurrect_index
+                        src = resurrect_index(group.demoted, self.tokenizer,
+                                              self.featurizer, n=1)[0]
+                    else:
+                        src = group.replicas[group.first_alive()]
+                    manager.save_index(step, src, name=f"shard{g:02d}")
+                    floors.append({"next_addr": int(src._next_addr),
+                                   "next_seq": int(src._next_seq),
+                                   "retired": bool(group.retired)})
+                manager.save_routing(step, {
+                    "table": self._ctx["table"].to_record(),
+                    "groups": floors})
+            finally:
+                for group in reversed(self.groups):
+                    group.write_lock.release()
 
     @staticmethod
     def restore(manager, step: int, tokenizer: Optional[Tokenizer] = None,
@@ -893,12 +1203,17 @@ class ShardedWarren:
         """Rebuild from per-group snapshot logs at ``step``, fanning each
         group's snapshot out to ``replicas`` independent copies.
 
-        A gap in the group set (a torn multi-shard checkpoint) is an error,
-        never a silent truncation — addresses route by group number, so a
-        missing middle group would corrupt routing for every later group.
+        When the checkpoint carries a routing record (any warren
+        checkpointed since rebalancing landed), the routing table, group
+        epochs, retirement flags, and exact allocation floors are restored
+        with it; legacy checkpoints fall back to the striped table.  A gap
+        in the group set (a torn multi-shard checkpoint) is an error,
+        never a silent truncation — a missing middle group would corrupt
+        routing for every later group.
         """
         from repro.dist.checkpoint import CheckpointCorrupt
 
+        routing = manager.restore_routing(step)
         present = set()
         for fn in os.listdir(manager.directory):
             m = re.match(r"^shard(\d+)_(\d{8})\.log$", fn)
@@ -906,23 +1221,49 @@ class ShardedWarren:
                 present.add(int(m.group(1)))
         if not present:
             raise FileNotFoundError(f"no shard snapshots at step {step}")
-        missing = set(range(max(present) + 1)) - present
+        n_expected = (RoutingTable.from_record(routing["table"]).n_groups
+                      if routing is not None else max(present) + 1)
+        missing = set(range(n_expected)) - present
         if missing:
             raise CheckpointCorrupt(
                 f"step {step} is missing shard snapshots {sorted(missing)} "
-                f"of {max(present) + 1}")
+                f"of {n_expected}")
         tokenizer = tokenizer or Utf8Tokenizer()
         featurizer = featurizer or JsonFeaturizer()
+        table = (RoutingTable.from_record(routing["table"])
+                 if routing is not None else None)
         groups: List[ReplicaGroup] = []
-        for g in sorted(present):
+        for g in range(n_expected):
             reps = manager.restore_index_replicas(
                 step, name=f"shard{g:02d}", n=replicas,
                 tokenizer=tokenizer, featurizer=featurizer)
-            for idx in reps:
-                idx._next_addr = max(idx._next_addr, g * STRIPE)
-            groups.append(ReplicaGroup(g, reps))
+            if routing is not None:
+                floors = routing["groups"][g]
+                for idx in reps:
+                    idx._next_addr = int(floors["next_addr"])
+                    idx._next_seq = int(floors["next_seq"])
+            else:
+                for idx in reps:
+                    # legacy (pre-routing) checkpoints are striped by
+                    # construction; a group whose recovered addresses fall
+                    # outside its stripe can only come from a rebalanced
+                    # family whose routing record was lost — refuse loudly
+                    # instead of silently misrouting the moved addresses
+                    if idx._next_addr > 0 and \
+                            shard_of(idx._next_addr - 1) != g:
+                        raise CheckpointCorrupt(
+                            f"shard {g} snapshot holds addresses outside "
+                            f"its stripe but step {step} has no routing "
+                            "record — rebalanced checkpoint missing its "
+                            "routing file")
+                    idx._next_addr = max(idx._next_addr, g * STRIPE)
+            grp = ReplicaGroup(g, reps)
+            if routing is not None:
+                grp.epoch = table.group_epochs[g]
+                grp.retired = bool(routing["groups"][g].get("retired"))
+            groups.append(grp)
         return ShardedWarren(tokenizer=tokenizer, featurizer=featurizer,
-                             _groups=groups)
+                             _groups=groups, _table=table)
 
     # -- internals --------------------------------------------------------- #
     def _require_started(self) -> None:

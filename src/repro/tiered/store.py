@@ -484,6 +484,61 @@ def resurrect_index(directory: str, tokenizer: Optional[Tokenizer] = None,
     return out
 
 
+def merge_demoted(dst_dir: str, src_dir: str) -> Manifest:
+    """Ship one demoted group's runs into another by *manifest*: copy the
+    source's immutable run directories file-level into the destination's
+    run set (fresh run ids, no record decoding) and publish a successor
+    manifest covering both — the cold half of live shard rebalancing.
+
+    Crash safety follows the manifest invariants: runs are copied before
+    the successor is published, so a crash mid-copy leaves orphan run
+    directories that the next open garbage-collects, and the destination
+    keeps recovering to its previous latest-good manifest.  The source
+    directory is left untouched (the caller retires the group and may
+    delete it once nothing pins its manifest).  Sequence ranges of the two
+    groups may overlap; that is safe — their address ranges are disjoint,
+    so exact-interval conflicts between the run sets are impossible, and
+    allocation floors take the pairwise max.
+    """
+    import shutil
+    from dataclasses import replace as _replace
+
+    dms, sms = ManifestStore(dst_dir), ManifestStore(src_dir)
+    dm = dms.load_latest_good()
+    sm = sms.load_latest_good()
+    if dm is None or sm is None:
+        raise FileNotFoundError("merge_demoted needs a manifest on both "
+                                f"sides ({dst_dir!r}, {src_dir!r})")
+    runs = list(dm.runs)
+    next_id = dm.next_run_id
+    # idempotent retry: a crashed earlier attempt may have already
+    # published some of the source's runs into the destination manifest
+    already = {(r.seq_lo, r.seq_hi, r.addr_lo, r.addr_hi, r.n_records,
+                r.n_features) for r in dm.runs}
+    for info in sm.runs:
+        if (info.seq_lo, info.seq_hi, info.addr_lo, info.addr_hi,
+                info.n_records, info.n_features) in already:
+            continue
+        name = f"run_{next_id:08d}"
+        target = dms.run_path(name)
+        if os.path.exists(target):
+            # orphan from a crashed earlier attempt (copied but never
+            # published, so next_run_id never advanced): replace it, don't
+            # collide — retries must succeed without manual cleanup
+            shutil.rmtree(target)
+        shutil.copytree(sms.run_path(info.name), target)
+        runs.append(_replace(info, run_id=next_id, name=name))
+        next_id += 1
+    new = dm.successor(frozen_upto=max(dm.frozen_upto, sm.frozen_upto),
+                       next_run_id=next_id,
+                       next_addr=max(dm.next_addr, sm.next_addr),
+                       next_seq=max(dm.next_seq, sm.next_seq),
+                       runs=runs)
+    dms.publish(new)
+    dms.gc(new)     # any remaining orphans from crashed attempts
+    return new
+
+
 class StaticWarren(_SnapshotReads):
     """Read-only Warren surface over a demoted run set (no hot tier).
 

@@ -291,9 +291,10 @@ class RetrievalServer:
         qfeatures = [[ranking.TF_PREFIX + ranking.porter_stem(term)
                       for term in terms] for terms in qterms]
         stems = list(dict.fromkeys(f for row in qfeatures for f in row))
-        n_groups = self.warren.n_shards
         # scatter: ONE fan-out per group for the whole micro-batch — every
-        # group returns its stats and its slice of every term list
+        # group returns its stats and its slice of every term list (the
+        # fan-out follows the session's pinned routing table, so the group
+        # count comes from the gather, not from the live warren)
         t0 = time.perf_counter()
         with self.warren:
             gathered = self.warren.map_groups(
@@ -301,6 +302,7 @@ class RetrievalServer:
                            [w.annotations(f) for f in stems]))
         t_scatter = time.perf_counter() - t0
         t0 = time.perf_counter()
+        n_groups = len(gathered)
         per = [s for s, _ in gathered]
         lists = [lst for _, lst in gathered]
         n_docs = sum(s.n_docs for s in per)
@@ -308,9 +310,8 @@ class RetrievalServer:
             self.timings.add(scatter=t_scatter, queries=qn)
             return [[] for _ in queries]
         # global stats, computed exactly as collection_stats would over the
-        # merged surface (group-major concatenation IS address order)
+        # merged surface (avgdl is order-free; ties merge by address below)
         avgdl = float(np.concatenate([s.doc_lens for s in per]).mean())
-        offsets = np.cumsum([0] + [s.n_docs for s in per])
         # per stem: per-group (doc_idx, impact) with GLOBAL df/avgdl, then
         # the posting cap applied to the *global* list so the kept postings
         # are exactly the single-index path's
@@ -389,8 +390,10 @@ class RetrievalServer:
                      for p in pending]
         t_score = time.perf_counter() - t0
         # gather: global k-way merge; per-group lists come out of top_k
-        # sorted by (-score, doc index), so the composite key reproduces
-        # the single-index tie order
+        # sorted by (-score, doc index) = (-score, address) within a group,
+        # and the composite key merges on the document's ADDRESS, which is
+        # the single-index tie order no matter how rebalancing has
+        # interleaved group address ranges
         t0 = time.perf_counter()
         out = []
         for qi in range(qn):
@@ -399,11 +402,11 @@ class RetrievalServer:
                 if res is None:
                     continue
                 sc, ids = res
-                runs.append([(-float(s), int(offsets[g]) + int(d), g)
+                runs.append([(-float(s), int(per[g].doc_starts[int(d)]))
                              for s, d in zip(sc[qi], ids[qi]) if s > 0])
-            merged = heapq.merge(*runs)   # key: (-score, global doc index)
-            row = [(int(per[g].doc_starts[gdi - offsets[g]]), -neg_s)
-                   for neg_s, gdi, g in itertools.islice(merged, k)]
+            merged = heapq.merge(*runs)   # key: (-score, address)
+            row = [(addr, -neg_s)
+                   for neg_s, addr in itertools.islice(merged, k)]
             out.append(row)
         t_merge = time.perf_counter() - t0
         self.timings.add(scatter=t_scatter, score=t_score, merge=t_merge,
