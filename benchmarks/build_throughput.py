@@ -61,7 +61,29 @@ def run(n_docs: int = 1500, n_writers: int = 4):
     print(f"{n_writers}-writer dynamic:     {multi_s:6.2f}s "
           f"({n_docs / multi_s:7.0f} docs/s)")
     print(f"static freeze:         {static_s:6.2f}s")
+    _gauge_build(n_docs, single_s, multi_s, static_s)
     return {"single_s": single_s, "multi_s": multi_s, "static_s": static_s}
+
+
+def _gauge_build(n_docs, single_s, multi_s, static_s=None) -> None:
+    from repro import obs
+
+    reg = obs.registry()
+    reg.gauge("build_docs_per_s", "dynamic build throughput",
+              mode="single").set(n_docs / single_s)
+    if multi_s is not None:
+        reg.gauge("build_docs_per_s", mode="multi").set(n_docs / multi_s)
+    if static_s is not None:
+        reg.gauge("build_static_freeze_s",
+                  "wall time to freeze the build into a static run"
+                  ).set(static_s)
+
+
+def _emit_build_bench(path: str, extra: dict) -> None:
+    from repro.obs import bench as obs_bench
+
+    doc = obs_bench.emit(path, "build", extra={"bench": extra})
+    print(f"  wrote {path} ({doc['schema']}, kind=build)")
 
 
 def run_tiered(n_docs: int = 1500, batch: int = 64,
@@ -107,6 +129,7 @@ def run_tiered(n_docs: int = 1500, batch: int = 64,
         if smoke and m.n_freezes == 0:
             raise SystemExit("tiered smoke: compactor never froze the "
                              "hot tier")
+        _gauge_build(n_docs, build_s, None)
         return {"build_s": build_s, "n_freezes": m.n_freezes,
                 "n_merges": m.n_merges, "total_pause_s": m.total_pause_s,
                 "max_pause_s": m.max_pause_s}
@@ -122,8 +145,15 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="fail loudly on lost docs or an idle compactor "
                          "(CI regression guard)")
+    ap.add_argument("--emit-bench", metavar="PATH", default=None,
+                    help="write a schema-versioned BENCH_build.json from "
+                         "the obs registry snapshot (repro.obs.bench)")
     args = ap.parse_args()
     if args.tiered:
-        run_tiered(args.docs, smoke=args.smoke)
+        res = run_tiered(args.docs, smoke=args.smoke)
     else:
-        run(args.docs, args.writers)
+        res = run(args.docs, args.writers)
+    if args.emit_bench:
+        _emit_build_bench(args.emit_bench,
+                          extra={"docs": args.docs, "tiered": args.tiered,
+                                 "smoke": args.smoke, **res})

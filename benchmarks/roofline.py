@@ -165,6 +165,93 @@ def table(records, title: str) -> str:
     return "\n".join(lines)
 
 
+# --------------------------------------------------------------------- #
+# Kernel benches: achieved vs roofline for the two Pallas kernels        #
+# --------------------------------------------------------------------- #
+
+def _time_op(fn, *, warmup: int = 1, reps: int = 3) -> float:
+    """Median wall seconds per call; blocks on the result each rep."""
+    import time as _time
+
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    samples = []
+    for _ in range(reps):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append(_time.perf_counter() - t0)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def kernel_bench(smoke: bool = False):
+    """Time ``bm25_blockmax_topk`` and ``interval_join`` at a few sizes and
+    report achieved GFLOP/s against the roofline bound (min of the compute
+    and HBM ceilings for each kernel's FLOP/byte mix).  Results land in the
+    obs registry as ``kernel_achieved_gflops{kernel,size}`` and
+    ``kernel_roofline_frac{kernel,size}`` so ``--emit-bench`` can persist
+    them as the BENCH_kernels.json trajectory point."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import obs
+    from repro.kernels.bm25_blockmax.ops import bm25_blockmax_topk
+    from repro.kernels.interval_join.ops import interval_join
+
+    reg = obs.registry()
+    rng = np.random.default_rng(0)
+    rows = []
+
+    bm25_sizes = [(8, 32, 64)] if smoke else [(8, 32, 64), (16, 128, 64)]
+    for t, nb, bs in bm25_sizes:
+        impacts = jnp.asarray(
+            rng.random((t, nb, bs), dtype=np.float32) *
+            (rng.random((t, nb, bs)) < 0.3))
+        bmax = impacts.max(axis=2)
+        fn = lambda: bm25_blockmax_topk(impacts, bmax, k=10)  # noqa: E731
+        secs = _time_op(fn)
+        # per-doc score = sum over T term impacts -> ~T adds per (block, slot)
+        flops = float(t * nb * bs)
+        nbytes = 4.0 * (t * nb * bs + t * nb)        # impacts + block maxima
+        rows.append(("bm25_blockmax", f"{t}x{nb}x{bs}", secs, flops, nbytes))
+
+    join_sizes = [1024] if smoke else [1024, 4096]
+    for n in join_sizes:
+        a_s = jnp.asarray(rng.integers(0, 1 << 20, n), dtype=jnp.int32)
+        a_e = a_s + jnp.asarray(rng.integers(1, 64, n), dtype=jnp.int32)
+        b_s = jnp.asarray(rng.integers(0, 1 << 20, n), dtype=jnp.int32)
+        b_e = b_s + jnp.asarray(rng.integers(64, 4096, n), dtype=jnp.int32)
+        fn = lambda: interval_join(a_s, a_e, b_s, b_e)  # noqa: E731
+        secs = _time_op(fn)
+        flops = 3.0 * n * n                     # 2 compares + OR-combine/pair
+        nbytes = 4.0 * (4 * n + n)              # four int32 inputs + mask out
+        rows.append(("interval_join", f"{n}x{n}", secs, flops, nbytes))
+
+    print("| kernel | size | wall ms | achieved GFLOP/s | roofline frac |")
+    print("|---|---|---|---|---|")
+    for kernel, size, secs, flops, nbytes in rows:
+        achieved = flops / secs / 1e9
+        bound_s = max(flops / PEAK_FLOPS, nbytes / HBM_BW)
+        frac = bound_s / secs if secs > 0 else 0.0
+        reg.gauge("kernel_achieved_gflops",
+                  "measured kernel throughput (median of 3 reps)",
+                  kernel=kernel, size=size).set(achieved)
+        reg.gauge("kernel_roofline_frac",
+                  "achieved / roofline-bound time (1.0 = at the ceiling)",
+                  kernel=kernel, size=size).set(frac)
+        print(f"| {kernel} | {size} | {1e3 * secs:.2f} | {achieved:.3f} | "
+              f"{frac:.2e} |")
+    return rows
+
+
+def _emit_kernel_bench(path: str, extra: dict) -> None:
+    from repro.obs import bench as obs_bench
+
+    doc = obs_bench.emit(path, "kernels", extra={"bench": extra})
+    print(f"wrote {path} ({doc['schema']}, kind=kernels)")
+
+
 def main():
     base = os.path.join(os.path.dirname(__file__), "..", "experiments")
     for mesh in ["pod16x16", "pod2x16x16"]:
@@ -180,4 +267,26 @@ def main():
 
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--kernels", action="store_true",
+                    help="time the Pallas kernels (bm25_blockmax, "
+                         "interval_join) instead of analyzing dry-run "
+                         "artifacts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes only (CI)")
+    ap.add_argument("--emit-bench", metavar="PATH", default=None,
+                    help="write a schema-versioned BENCH_kernels.json from "
+                         "the obs registry snapshot (implies --kernels)")
+    args = ap.parse_args()
+    if args.kernels or args.emit_bench:
+        rows = kernel_bench(smoke=args.smoke)
+        if args.emit_bench:
+            _emit_kernel_bench(
+                args.emit_bench,
+                extra={"smoke": args.smoke,
+                       "rows": [{"kernel": k, "size": s, "wall_s": secs}
+                                for k, s, secs, _, _ in rows]})
+        sys.exit(0)
     sys.exit(main())

@@ -44,7 +44,23 @@ def main():
                     help="with --shards: demote every shard group to a "
                          "static run set after the build and show query "
                          "parity (a write promotes a group back)")
+    ap.add_argument("--metrics-dump", metavar="PATH", default=None,
+                    help="on exit, append the obs metrics snapshot to PATH "
+                         "as a JSONL record and write the Prometheus text "
+                         "exposition to PATH + '.prom'")
+    ap.add_argument("--trace-slow", metavar="MS", type=float, default=None,
+                    help="dump any request trace slower than MS milliseconds "
+                         "to traces_slow.jsonl next to --metrics-dump (or "
+                         "the cwd)")
     args = ap.parse_args()
+    if args.trace_slow is not None:
+        import os
+
+        from repro import obs
+        slow_path = os.path.join(
+            os.path.dirname(args.metrics_dump) if args.metrics_dump else ".",
+            "traces_slow.jsonl")
+        obs.tracer().set_slow_dump(args.trace_slow, slow_path)
     if args.tiered and (args.shards > 1 or args.replicas > 1):
         ap.error("--tiered is the single-node engine; for sharded cold "
                  "storage use --shards N --demote-cold")
@@ -170,6 +186,18 @@ def main():
         warren.close()               # shuts the scatter pool, if any
     if tmpdir is not None:
         tmpdir.cleanup()
+    if args.metrics_dump:
+        from repro import obs
+        from repro.obs import JsonlSink
+        reg = obs.registry()
+        JsonlSink(args.metrics_dump).write(reg)
+        with open(args.metrics_dump + ".prom", "w") as fh:
+            fh.write(reg.to_prometheus())
+        print(f"metrics dumped to {args.metrics_dump} (+ .prom)")
+    if args.trace_slow is not None:
+        tr = obs.tracer()
+        print(f"slow traces (> {args.trace_slow:g} ms): "
+              f"{tr.n_slow_dumped} dumped to {slow_path}")
 
 
 if __name__ == "__main__":

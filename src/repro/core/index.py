@@ -19,10 +19,12 @@ Transactions follow two-phase commit:
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from .annotation import (AnnotationList, merge_lists, reduce_minimal,
                          union_intervals)
 from .featurizer import Featurizer, JsonFeaturizer
@@ -395,6 +397,7 @@ class Transaction:
         self._state = "ready"
 
     def commit(self) -> None:
+        t0 = time.perf_counter()
         if self._state == "open":
             self.ready()
         if self._state != "ready":
@@ -406,6 +409,12 @@ class Transaction:
             index._pending.pop(seq, None)
             index._publish(self._segment)
         self._state = "committed"
+        reg = obs.registry()
+        if reg.enabled:
+            reg.histogram(
+                "txn_commit_latency_ms",
+                "ready (if pending) + durable commit marker + publish"
+            ).observe(1e3 * (time.perf_counter() - t0))
         index._maybe_auto_merge()
 
     def abort(self) -> None:

@@ -35,10 +35,13 @@ accumulator the serving paths report their per-query breakdown through.
 
 from __future__ import annotations
 
+import contextvars
 import os
 import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.obs import registry
 
 
 class ScatterTimings:
@@ -47,19 +50,42 @@ class ScatterTimings:
     ``scatter``  fan-out reads (per-group stats + annotation lists)
     ``score``    per-group packing + device/host scoring
     ``merge``    the global k-way merge of per-group top-k lists
+
+    Every ``add`` also feeds the per-query breakdown into the obs
+    histograms (``serve_{scatter,score,merge}_latency_ms{site=...}``),
+    which carry the percentiles; the struct itself keeps only running
+    sums for its human-readable ``summary``.  Because one instance is
+    shared across every clone of a warren (via ``_ctx``), the sums are
+    *windowed*: ``window()`` returns the delta since the last call and
+    bumps ``epoch``, so long-lived servers report per-window rates
+    instead of lifetime averages.
     """
 
-    def __init__(self):
+    def __init__(self, site: str = "warren.search"):
         self._lock = threading.Lock()
+        self.site = site
+        self.epoch = 0
         self.scatter_s = 0.0
         self.score_s = 0.0
         self.merge_s = 0.0
         self.queries = 0
+        reg = registry()
+        self._h_scatter = reg.histogram(
+            "serve_scatter_latency_ms",
+            "per-query scatter (fan-out read) time", site=site)
+        self._h_score = reg.histogram(
+            "serve_score_latency_ms",
+            "per-query pack + device/host scoring time", site=site)
+        self._h_merge = reg.histogram(
+            "serve_merge_latency_ms",
+            "per-query global k-way merge time", site=site)
 
     def reset(self) -> None:
+        """Zero the window sums and bump the epoch marker."""
         with self._lock:
             self.scatter_s = self.score_s = self.merge_s = 0.0
             self.queries = 0
+            self.epoch += 1
 
     def add(self, scatter: float = 0.0, score: float = 0.0,
             merge: float = 0.0, queries: int = 1) -> None:
@@ -68,11 +94,26 @@ class ScatterTimings:
             self.score_s += score
             self.merge_s += merge
             self.queries += queries
+        self._h_scatter.observe(1e3 * scatter)
+        self._h_score.observe(1e3 * score)
+        self._h_merge.observe(1e3 * merge)
 
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
             return {"scatter_s": self.scatter_s, "score_s": self.score_s,
-                    "merge_s": self.merge_s, "queries": self.queries}
+                    "merge_s": self.merge_s, "queries": self.queries,
+                    "epoch": self.epoch}
+
+    def window(self) -> Dict[str, float]:
+        """Snapshot the current window, then reset it (epoch += 1)."""
+        with self._lock:
+            out = {"scatter_s": self.scatter_s, "score_s": self.score_s,
+                   "merge_s": self.merge_s, "queries": self.queries,
+                   "epoch": self.epoch}
+            self.scatter_s = self.score_s = self.merge_s = 0.0
+            self.queries = 0
+            self.epoch += 1
+        return out
 
     def summary(self) -> str:
         s = self.snapshot()
@@ -112,8 +153,12 @@ class ScatterGather:
             return [t() for t in thunks]
         futures = []
         for t in thunks[1:]:
+            # One context copy per thunk: trace spans opened inside the
+            # worker parent under the span active at submission, and a
+            # Context can only run one callable at a time.
+            ctx = contextvars.copy_context()
             try:
-                futures.append(self._pool.submit(t))
+                futures.append(self._pool.submit(ctx.run, t))
             except RuntimeError:          # close() raced the fan-out: the
                 futures.append(t)         # unsubmitted tail runs inline
         first: Optional[BaseException] = None

@@ -71,6 +71,7 @@ from concurrent.futures import Future
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
+from repro import obs
 from repro.core.annotation import union_intervals
 from repro.core.index import (DynamicIndex, Segment, erased_carrier,
                               partition_segment)
@@ -136,6 +137,18 @@ class Rebalancer:
     def last_stats(self) -> Optional[RebalanceStats]:
         return self.history[-1] if self.history else None
 
+    def _record(self, stats: RebalanceStats) -> None:
+        """Append to history and publish the migration to the registry —
+        the swap stall is the one number a rebalance can hurt serving by."""
+        self.history.append(stats)
+        reg = obs.registry()
+        if reg.enabled:
+            reg.counter("rebalance_total", "completed migrations",
+                        kind=stats.kind).inc()
+            reg.histogram("rebalance_swap_stall_ms",
+                          "writer stall of the atomic swap window"
+                          ).observe(1e3 * stats.swap_s)
+
     # ------------------------------------------------------------------ #
     def _hook(self, stage: str, gid: int) -> None:
         hook = self.warren.hooks.get("mid_migration")
@@ -183,25 +196,27 @@ class Rebalancer:
             segs0 = src_idx._segments
         freeze_seq = max((s.seqnum for s in segs0), default=-1)
         t0 = time.perf_counter()
-        out.extend(self._stream(segs0, transform))
+        with obs.span("bulk_copy", group=grp.group_id):
+            out.extend(self._stream(segs0, transform))
         streamed, n_streamed = freeze_seq, len(segs0)
         copy_s = time.perf_counter() - t0
         self._hook("after_copy", grp.group_id)
         t0 = time.perf_counter()
         rounds = 0
-        for _ in range(8):
-            src_idx = self._serving_index(grp)
-            with src_idx._publish_lock:
-                segs = src_idx._segments
-            tail = [s for s in segs if s.seqnum > streamed]
-            if not tail:
-                break
-            rounds += 1
-            out.extend(self._stream(tail, transform))
-            streamed = max(s.seqnum for s in tail)
-            n_streamed += len(tail)
-            if len(tail) <= 2:
-                break
+        with obs.span("catchup", group=grp.group_id):
+            for _ in range(8):
+                src_idx = self._serving_index(grp)
+                with src_idx._publish_lock:
+                    segs = src_idx._segments
+                tail = [s for s in segs if s.seqnum > streamed]
+                if not tail:
+                    break
+                rounds += 1
+                out.extend(self._stream(tail, transform))
+                streamed = max(s.seqnum for s in tail)
+                n_streamed += len(tail)
+                if len(tail) <= 2:
+                    break
         catchup_s = time.perf_counter() - t0
         self._hook("before_swap", grp.group_id)
         return freeze_seq, streamed, n_streamed, rounds, copy_s, catchup_s
@@ -227,7 +242,8 @@ class Rebalancer:
             for idx in grp.replicas:
                 idx.set_merge_fence(_FENCE_ALL)
             try:
-                return self._split_locked(grp, table, pivot)
+                with obs.span("rebalance.split", source=source):
+                    return self._split_locked(grp, table, pivot)
             finally:
                 for idx in grp.replicas:
                     idx.set_merge_fence(-1)
@@ -286,7 +302,7 @@ class Rebalancer:
 
         # 3. atomic swap: the only writer stall
         t0 = time.perf_counter()
-        with grp.write_lock:
+        with obs.span("swap", group=source), grp.write_lock:
             if grp.demoted is not None or grp.retired:
                 raise RebalanceAborted(
                     f"shard group {source} was demoted/retired "
@@ -362,7 +378,7 @@ class Rebalancer:
             epoch=w._ctx["table"].epoch, freeze_seq=freeze_seq, pivot=pivot,
             segments_streamed=n_streamed, catchup_rounds=rounds,
             copy_s=copy_s, catchup_s=catchup_s, swap_s=swap_s)
-        self.history.append(stats)
+        self._record(stats)
         return new_gid
 
     # ------------------------------------------------------------------ #
@@ -377,7 +393,9 @@ class Rebalancer:
             dgrp, sgrp = self._group(dest), self._group(source)
             table: RoutingTable = w._ctx["table"]
             if dgrp.demoted is not None and sgrp.demoted is not None:
-                self._merge_demoted_locked(dgrp, sgrp, table)
+                with obs.span("rebalance.merge", source=source, dest=dest,
+                              demoted=True):
+                    self._merge_demoted_locked(dgrp, sgrp, table)
                 return
             # mixed hot/cold: promote the cold side, then merge hot
             if dgrp.demoted is not None:
@@ -387,7 +405,8 @@ class Rebalancer:
             for idx in sgrp.replicas:
                 idx.set_merge_fence(_FENCE_ALL)
             try:
-                self._merge_locked(dgrp, sgrp, table)
+                with obs.span("rebalance.merge", source=source, dest=dest):
+                    self._merge_locked(dgrp, sgrp, table)
             finally:
                 for idx in sgrp.replicas:
                     idx.set_merge_fence(-1)
@@ -407,7 +426,8 @@ class Rebalancer:
         #    the same discipline quorum commits use, so no deadlocks)
         t0 = time.perf_counter()
         first, second = sorted([dgrp, sgrp], key=lambda g: g.group_id)
-        with first.write_lock, second.write_lock:
+        with obs.span("swap", group=source), \
+                first.write_lock, second.write_lock:
             if (dgrp.demoted is not None or sgrp.demoted is not None
                     or dgrp.retired or sgrp.retired):
                 raise RebalanceAborted(
@@ -462,7 +482,7 @@ class Rebalancer:
 
         for idx in dgrp.replicas + sgrp.replicas:
             idx.compact_log()
-        self.history.append(RebalanceStats(
+        self._record(RebalanceStats(
             kind="merge", source=source, dest=dest,
             epoch=w._ctx["table"].epoch, freeze_seq=freeze_seq,
             segments_streamed=n_streamed, catchup_rounds=rounds,
@@ -482,7 +502,8 @@ class Rebalancer:
         dest, source = dgrp.group_id, sgrp.group_id
         t0 = time.perf_counter()
         first, second = sorted([dgrp, sgrp], key=lambda g: g.group_id)
-        with first.write_lock, second.write_lock:
+        with obs.span("swap", group=source), \
+                first.write_lock, second.write_lock:
             if dgrp.demoted is None or sgrp.demoted is None:
                 raise RebalanceAborted(
                     "a group was promoted mid-merge; retry")
@@ -516,7 +537,7 @@ class Rebalancer:
                                    if g != source),
                 group_epochs=epochs)
         swap_s = time.perf_counter() - t0
-        self.history.append(RebalanceStats(
+        self._record(RebalanceStats(
             kind="merge-demoted", source=source, dest=dest,
             epoch=w._ctx["table"].epoch, segments_streamed=shipped,
             swap_s=swap_s))

@@ -89,6 +89,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import ranking
 from repro.dist.parallel import ScatterGather, ScatterTimings
 from repro.core.annotation import AnnotationList, merge_lists
@@ -696,12 +697,28 @@ class ShardedWarren:
             pool = self._ctx["scatter"]
             try:
                 if pool is not None and table.n_groups > 1:
-                    return pool.run([(lambda g=g: self._group_read(g, fn))
+                    return pool.run([(lambda g=g: self._scatter_read(g, fn))
                                      for g in gids])
-                return [self._group_read(g, fn) for g in gids]
+                return [self._scatter_read(g, fn) for g in gids]
             except _RouteEpochChanged:
                 self._refresh_view()
         raise ReplicaFailure("routing table kept changing mid-read")
+
+    def _scatter_read(self, group: int, fn):
+        """One group's leg of a fan-out: a ``scatter`` span plus the
+        per-group latency histogram around the failover-protected read."""
+        reg = obs.registry()
+        with obs.span("scatter", group=group):
+            t0 = time.perf_counter()
+            try:
+                return self._group_read(group, fn)
+            finally:
+                if reg.enabled:
+                    reg.histogram(
+                        "scatter_latency_ms",
+                        "per-group fan-out read time (failover included)",
+                        group=group,
+                    ).observe(1e3 * (time.perf_counter() - t0))
 
     def start(self) -> None:
         if self._started:
@@ -893,13 +910,23 @@ class ShardedWarren:
     def _phase1(self) -> None:
         """Quorum-ready every touched group or raise QuorumError."""
         hook = self.hooks.get("on_ready")
-        for g in sorted(self._txn_open):
-            gt = self._txn_open[g]
-            ok = gt.quorum_ready(hook=hook)
-            if ok < gt.group.quorum:
-                raise QuorumError(
-                    f"shard group {g}: {ok}/{gt.group.n_replicas} replicas "
-                    f"ready, quorum is {gt.group.quorum}")
+        t0 = time.perf_counter()
+        try:
+            for g in sorted(self._txn_open):
+                gt = self._txn_open[g]
+                ok = gt.quorum_ready(hook=hook)
+                if ok < gt.group.quorum:
+                    raise QuorumError(
+                        f"shard group {g}: {ok}/{gt.group.n_replicas} "
+                        f"replicas ready, quorum is {gt.group.quorum}")
+        finally:
+            reg = obs.registry()
+            if reg.enabled:
+                reg.histogram(
+                    "txn_quorum_wait_ms",
+                    "phase-1 time to durably ready a quorum of every "
+                    "touched group",
+                ).observe(1e3 * (time.perf_counter() - t0))
 
     def _restage(self) -> None:
         """Re-stage the logical op list against the current routing table
@@ -960,14 +987,20 @@ class ShardedWarren:
                 mid(self, g)
         append_remap = None
         failed: Optional[BaseException] = None
+        reg = obs.registry()
         try:
             for g in sorted(self._txn_open):   # phase 2: publish
                 remap, err = self._txn_open[g].commit_live()
                 if remap is None:              # every replica of g failed —
                     failed = failed or err or RuntimeError(  # ready records
                         f"shard group {g}: no replica published")  # durable
-                elif g == self._append_shard:
-                    append_remap = remap
+                else:
+                    if reg.enabled:
+                        reg.counter("shard_write_total",
+                                    "group transactions published",
+                                    group=g).inc()
+                    if g == self._append_shard:
+                        append_remap = remap
         finally:
             self._release_locks()
             self._reset_txn()
@@ -1004,17 +1037,27 @@ class ShardedWarren:
         to a live sibling when the replica was marked failed or raises
         ReplicaFailure."""
         grp = self.groups[group]
+        reg = obs.registry()
+        if reg.enabled:
+            reg.counter("shard_read_total", "group reads served",
+                        group=group).inc()
         for _ in range(grp.n_replicas + 1):
             r, w = self._read[group]
             if r is None:                # static read over a demoted group
-                return fn(w)
+                with obs.span("replica_read", group=group, replica="static"):
+                    return fn(w)
             if not grp.alive[r]:
                 self._repin(group)
                 continue
             try:
-                return fn(w)
+                with obs.span("replica_read", group=group, replica=r):
+                    return fn(w)
             except ReplicaFailure:
                 grp.mark_failed(r)
+                if reg.enabled:
+                    reg.counter("shard_failover_total",
+                                "reads that failed over to a sibling",
+                                group=group).inc()
                 self._repin(group)
         raise ReplicaFailure(f"shard group {group}: failover exhausted")
 

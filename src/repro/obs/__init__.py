@@ -1,0 +1,46 @@
+"""repro.obs — the unified telemetry plane.
+
+Stdlib-only (no jax/numpy), so every subsystem — core, dist, tiered,
+train — can import it without cycles or optional-dependency gates.
+
+Three layers:
+
+* metrics: thread-safe Counter / Gauge / log-bucketed Histogram in a
+  process-global :func:`registry` of labeled families, exported as a
+  plain-dict snapshot, JSONL lines, or Prometheus text.
+* tracing: contextvar-propagated :func:`span` trees with a ring buffer
+  and slow-trace JSONL dump (see :mod:`repro.obs.trace`).
+* bench: schema-versioned ``BENCH_*.json`` emission + validation — the
+  persisted perf trajectory (see :mod:`repro.obs.bench`).
+
+Disable everything (both planes drop to ~100 ns no-ops) with
+:func:`disable`; re-enable with :func:`enable`.
+"""
+
+from .metrics import Counter, Gauge, Histogram
+from .registry import JsonlSink, MetricsRegistry, registry, sanitize
+from .trace import Span, Tracer, span, tracer
+from .bench import SCHEMA as BENCH_SCHEMA
+from .bench import emit as emit_bench
+from .bench import validate as validate_bench
+
+
+def enable() -> None:
+    """Turn on metrics and tracing process-wide."""
+    registry().enable()
+    tracer().enabled = True
+
+
+def disable() -> None:
+    """Turn off metrics and tracing process-wide (near-zero overhead)."""
+    registry().disable()
+    tracer().enabled = False
+
+
+__all__ = [
+    "Counter", "Gauge", "Histogram",
+    "JsonlSink", "MetricsRegistry", "registry", "sanitize",
+    "Span", "Tracer", "span", "tracer",
+    "BENCH_SCHEMA", "emit_bench", "validate_bench",
+    "enable", "disable",
+]

@@ -1,0 +1,207 @@
+"""Thread-safe metric primitives: Counter, Gauge, log-bucketed Histogram.
+
+Each metric is a single time series; the labeled *families* that group them
+("``scatter_latency_ms{group=3}``") live in :mod:`repro.obs.registry`.
+Design constraints, in order:
+
+* **Thread safety.**  Every mutation takes the metric's own lock; the
+  serving paths hammer these from the ScatterGather pool, the MicroBatcher
+  thread, and background compactors at once.  ``snapshot()`` takes the same
+  lock, so a snapshot is a consistent point-in-time view of one series.
+* **Disabled-mode fast path.**  Every mutator first checks the owning
+  registry's ``enabled`` flag and returns before touching the lock — a
+  disabled ``inc()``/``observe()`` costs one attribute load and a branch
+  (~100 ns), which is what lets instrumentation stay compiled into the hot
+  paths permanently instead of being stripped per-deployment.
+* **Bounded memory.**  A histogram is a fixed array of log-spaced buckets
+  (default: 20 per decade over [1e-3, 1e5], i.e. 1 µs to 100 s for
+  millisecond-valued series, ~12 % relative resolution) plus count/sum/
+  min/max.  Percentiles are exact up to bucket resolution: ``p95`` returns
+  the geometric midpoint of the bucket holding the 95th-percentile sample.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, List, Optional, Sequence
+
+
+class _Enabled:
+    """Stand-in owner for metrics constructed outside a registry."""
+
+    enabled = True
+
+
+_ALWAYS = _Enabled()
+
+
+class Counter:
+    """Monotonic counter (no decrements)."""
+
+    kind = "counter"
+
+    def __init__(self, _owner=_ALWAYS):
+        self._owner = _owner
+        self._lock = threading.Lock()
+        self._value = 0
+
+    def inc(self, n: int = 1) -> None:
+        if not self._owner.enabled:
+            return
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        with self._lock:
+            return self._value
+
+    def snapshot(self) -> dict:
+        return {"value": self.value}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._value = 0
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    kind = "gauge"
+
+    def __init__(self, _owner=_ALWAYS):
+        self._owner = _owner
+        self._lock = threading.Lock()
+        self._value = 0.0
+
+    def set(self, v: float) -> None:
+        if not self._owner.enabled:
+            return
+        with self._lock:
+            self._value = float(v)
+
+    def add(self, v: float) -> None:
+        if not self._owner.enabled:
+            return
+        with self._lock:
+            self._value += float(v)
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+    def snapshot(self) -> dict:
+        return {"value": self.value}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._value = 0.0
+
+
+class Histogram:
+    """Log-bucketed histogram with exact-to-resolution percentiles.
+
+    Bucket ``i`` (1-based) covers ``(lo·10^((i-1)/d), lo·10^(i/d)]`` with
+    ``d = per_decade``; bucket 0 is the underflow (v ≤ lo, including zeros
+    and negatives) and the last bucket the overflow.  ``percentile(p)``
+    walks the cumulative counts and returns the geometric midpoint of the
+    bucket where the p-quantile sample lives — within one bucket width
+    (~12 % at the default resolution) of the exact order statistic.
+    """
+
+    kind = "histogram"
+    PERCENTILES = (0.5, 0.95, 0.99)
+
+    def __init__(self, lo: float = 1e-3, hi: float = 1e5,
+                 per_decade: int = 20, _owner=_ALWAYS):
+        if lo <= 0 or hi <= lo:
+            raise ValueError("histogram needs 0 < lo < hi")
+        self._owner = _owner
+        self._lock = threading.Lock()
+        self._lo = lo
+        self._log_lo = math.log10(lo)
+        self._per_decade = per_decade
+        n = int(math.ceil((math.log10(hi) - self._log_lo) * per_decade))
+        self._n = n
+        self._counts = [0] * (n + 2)     # [0]=underflow, [n+1]=overflow
+        self._count = 0
+        self._sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+
+    def _bucket(self, v: float) -> int:
+        if v <= self._lo:
+            return 0
+        i = 1 + int((math.log10(v) - self._log_lo) * self._per_decade)
+        return min(i, self._n + 1)
+
+    def _bucket_mid(self, i: int) -> float:
+        """Geometric midpoint of bucket i (its representative value)."""
+        if i <= 0:
+            return self._lo
+        if i > self._n:
+            return 10 ** (self._log_lo + self._n / self._per_decade)
+        return 10 ** (self._log_lo + (i - 0.5) / self._per_decade)
+
+    def observe(self, v: float) -> None:
+        if not self._owner.enabled:
+            return
+        v = float(v)
+        b = self._bucket(v)
+        with self._lock:
+            self._counts[b] += 1
+            self._count += 1
+            self._sum += v
+            if v < self._min:
+                self._min = v
+            if v > self._max:
+                self._max = v
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    @property
+    def sum(self) -> float:
+        with self._lock:
+            return self._sum
+
+    def percentile(self, p: float) -> float:
+        """Value at quantile ``p`` ∈ [0, 1], exact to bucket resolution;
+        NaN when the histogram is empty."""
+        with self._lock:
+            return self._percentile_locked(p)
+
+    def _percentile_locked(self, p: float) -> float:
+        if self._count == 0:
+            return math.nan
+        # clamp the percentile's representative to the observed range so
+        # tiny samples don't report a bucket midpoint outside [min, max]
+        target = p * self._count
+        seen = 0
+        for i, c in enumerate(self._counts):
+            seen += c
+            if seen >= target and c:
+                mid = self._bucket_mid(i)
+                return min(max(mid, self._min), self._max)
+        return self._max
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            out = {"count": self._count, "sum": self._sum,
+                   "min": self._min if self._count else math.nan,
+                   "max": self._max if self._count else math.nan}
+            for p in self.PERCENTILES:
+                out[f"p{int(p * 100)}"] = self._percentile_locked(p)
+            return out
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counts = [0] * len(self._counts)
+            self._count = 0
+            self._sum = 0.0
+            self._min = math.inf
+            self._max = -math.inf

@@ -1,0 +1,195 @@
+"""MetricsRegistry: labeled metric families + the two exporters.
+
+One process-global registry (``repro.obs.registry()``) collects every
+metric family in the system.  A *family* is one metric name with one type
+and N labeled children — ``scatter_latency_ms{group=3}`` and
+``scatter_latency_ms{group=7}`` are two series of one family.  Accessors
+are get-or-create and return the live metric object, so instrumentation
+sites call ``registry().counter("x", group=g)`` freely; the same
+(name, labels) pair always yields the same object.
+
+Exporters:
+
+* ``JsonlSink`` appends one ``{"ts": ..., "metrics": snapshot}`` line per
+  ``write()`` — the persisted perf-trajectory form consumed by
+  ``BENCH_*.json`` emission and ``--metrics-dump``.
+* ``to_prometheus()`` renders the text exposition format (histograms as
+  summaries with quantile labels), for scraping or eyeballing.
+
+``enabled`` gates every child metric's mutators (see
+:mod:`repro.obs.metrics`): disabling the registry turns the whole
+instrumentation sweep into ~100 ns no-ops without unhooking anything.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+from .metrics import Counter, Gauge, Histogram
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def _label_key(labels: Dict[str, object]) -> LabelKey:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+class _Family:
+    __slots__ = ("kind", "help", "children")
+
+    def __init__(self, kind: str, help: str):
+        self.kind = kind
+        self.help = help
+        self.children: Dict[LabelKey, object] = {}
+
+
+class MetricsRegistry:
+    """Process-wide collection of labeled metric families."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._lock = threading.Lock()
+        self._families: Dict[str, _Family] = {}
+
+    # -- lifecycle -------------------------------------------------------- #
+    def enable(self) -> None:
+        self.enabled = True
+
+    def disable(self) -> None:
+        self.enabled = False
+
+    def reset(self) -> None:
+        """Zero every series (families and label sets survive)."""
+        with self._lock:
+            fams = list(self._families.values())
+        for fam in fams:
+            for m in list(fam.children.values()):
+                m.reset()
+
+    # -- get-or-create accessors ------------------------------------------ #
+    def _metric(self, cls, name: str, help: str, labels: dict, **kw):
+        key = _label_key(labels)
+        with self._lock:
+            fam = self._families.get(name)
+            if fam is None:
+                fam = self._families[name] = _Family(cls.kind, help)
+            elif fam.kind != cls.kind:
+                raise ValueError(
+                    f"metric {name!r} is a {fam.kind}, not a {cls.kind}")
+            m = fam.children.get(key)
+            if m is None:
+                m = fam.children[key] = cls(_owner=self, **kw)
+            if help and not fam.help:
+                fam.help = help
+        return m
+
+    def counter(self, name: str, help: str = "", **labels) -> Counter:
+        return self._metric(Counter, name, help, labels)
+
+    def gauge(self, name: str, help: str = "", **labels) -> Gauge:
+        return self._metric(Gauge, name, help, labels)
+
+    def histogram(self, name: str, help: str = "", lo: float = 1e-3,
+                  hi: float = 1e5, per_decade: int = 20,
+                  **labels) -> Histogram:
+        return self._metric(Histogram, name, help, labels,
+                            lo=lo, hi=hi, per_decade=per_decade)
+
+    # -- export ------------------------------------------------------------ #
+    def snapshot(self) -> dict:
+        """Plain-dict view of every family: name → {type, help, series}."""
+        with self._lock:
+            fams = list(self._families.items())
+        out = {}
+        for name, fam in sorted(fams):
+            series = []
+            for key, m in sorted(fam.children.items()):
+                series.append({"labels": dict(key), **m.snapshot()})
+            out[name] = {"type": fam.kind, "help": fam.help,
+                         "series": series}
+        return out
+
+    def to_prometheus(self) -> str:
+        """Text exposition: counters/gauges verbatim, histograms as
+        summaries (quantile-labeled series + ``_sum`` and ``_count``)."""
+        def fmt_labels(labels: dict, extra: Optional[dict] = None) -> str:
+            items = dict(labels)
+            if extra:
+                items.update(extra)
+            if not items:
+                return ""
+            body = ",".join(f'{k}="{v}"' for k, v in sorted(items.items()))
+            return "{" + body + "}"
+
+        def num(v) -> str:
+            if isinstance(v, float) and math.isnan(v):
+                return "NaN"
+            return repr(float(v)) if isinstance(v, float) else str(v)
+
+        lines = []
+        snap = self.snapshot()
+        for name, fam in snap.items():
+            if fam["help"]:
+                lines.append(f"# HELP {name} {fam['help']}")
+            ptype = ("summary" if fam["type"] == "histogram"
+                     else fam["type"])
+            lines.append(f"# TYPE {name} {ptype}")
+            for s in fam["series"]:
+                labels = s["labels"]
+                if fam["type"] == "histogram":
+                    for p in Histogram.PERCENTILES:
+                        q = s[f"p{int(p * 100)}"]
+                        lines.append(f"{name}{fmt_labels(labels, {'quantile': p})} "
+                                     f"{num(q)}")
+                    lines.append(f"{name}_sum{fmt_labels(labels)} "
+                                 f"{num(s['sum'])}")
+                    lines.append(f"{name}_count{fmt_labels(labels)} "
+                                 f"{s['count']}")
+                else:
+                    lines.append(f"{name}{fmt_labels(labels)} "
+                                 f"{num(s['value'])}")
+        return "\n".join(lines) + "\n"
+
+
+class JsonlSink:
+    """Appends registry snapshots to a JSONL file, one line per write."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._lock = threading.Lock()
+
+    def write(self, registry: MetricsRegistry,
+              extra: Optional[dict] = None) -> dict:
+        rec = {"ts": time.time(), "metrics": registry.snapshot()}
+        if extra:
+            rec.update(extra)
+        rec = sanitize(rec)
+        line = json.dumps(rec, sort_keys=True, allow_nan=False)
+        with self._lock, open(self.path, "a") as fh:
+            fh.write(line + "\n")
+        return rec
+
+
+def sanitize(obj):
+    """NaN/inf → None, recursively — keeps every export strictly valid
+    JSON (json.dumps would otherwise emit bare ``NaN`` tokens)."""
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    if isinstance(obj, dict):
+        return {k: sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [sanitize(v) for v in obj]
+    return obj
+
+
+# -- process-global registry ------------------------------------------------ #
+_GLOBAL = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    """The process-global registry every subsystem reports into."""
+    return _GLOBAL

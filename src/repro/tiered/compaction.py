@@ -21,10 +21,16 @@ import threading
 from dataclasses import dataclass, field
 from typing import List
 
+from repro import obs
+
 
 @dataclass
 class CompactionMetrics:
-    """Counters + pause samples, shared by manual and background paths."""
+    """Counters + pause samples, shared by manual and background paths.
+
+    Pause samples also feed the ``compaction_pause_ms{kind}`` registry
+    histogram, so the LSM write-stall distribution shows up next to the
+    serving percentiles in every snapshot."""
     n_freezes: int = 0
     n_merges: int = 0
     pause_s: List[float] = field(default_factory=list)
@@ -32,10 +38,20 @@ class CompactionMetrics:
     def note_freeze(self, pause: float) -> None:
         self.n_freezes += 1
         self.pause_s.append(pause)
+        self._observe("freeze", pause)
 
     def note_merge(self, pause: float) -> None:
         self.n_merges += 1
         self.pause_s.append(pause)
+        self._observe("merge", pause)
+
+    @staticmethod
+    def _observe(kind: str, pause: float) -> None:
+        reg = obs.registry()
+        if reg.enabled:
+            reg.histogram("compaction_pause_ms",
+                          "reader-visible view-swap stall per freeze/merge",
+                          kind=kind).observe(1e3 * pause)
 
     @property
     def total_pause_s(self) -> float:

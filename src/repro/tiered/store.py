@@ -30,6 +30,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro import obs
 from repro.core.annotation import AnnotationList, merge_lists, union_intervals
 from repro.core.featurizer import Featurizer, JsonFeaturizer
 from repro.core.gcl import GCLNode, Phrase, Term
@@ -213,7 +214,7 @@ class TieredStore:
         ``snapshot()``.  Returns the new run's info, or None when the hot
         tier had nothing committed.
         """
-        with self._maint_lock:
+        with self._maint_lock, obs.span("tiered.freeze"):
             hot = self.hot
             hot.merge_segments()       # size-tiered auto-merge, freeze path
             s = hot.max_committed_seq()
@@ -253,6 +254,7 @@ class TieredStore:
                     hot.detach_segments(s)
                 self.metrics.note_freeze(time.perf_counter() - t0)
                 self._manifest = new_m
+                self._gauge_runs()
             finally:
                 hot.set_merge_fence(-1)
             hot.compact_log()          # WAL forgets the frozen segments
@@ -263,7 +265,7 @@ class TieredStore:
         """Merge every live run into one, GC'ing erased records.  No-op
         below ``min_runs``.  Pinned snapshots keep serving the victim runs
         (content resident, postings fd valid past unlink)."""
-        with self._maint_lock:
+        with self._maint_lock, obs.span("tiered.merge"):
             victims = self._runs
             if len(victims) < max(2, min_runs):
                 return None
@@ -286,7 +288,26 @@ class TieredStore:
             # serving, and each run's fd closes when its last reference
             # dies (StaticIndex.__del__)
             self.manifests.gc(new_m)
+            self._gauge_runs()
             return info
+
+    def _gauge_runs(self) -> None:
+        """Publish the static tier's size after a run-set swap."""
+        reg = obs.registry()
+        if not reg.enabled:
+            return
+        with self._view_lock:
+            runs = self._runs
+        total = 0
+        for r in runs:
+            try:
+                for fn in os.listdir(r.directory):
+                    total += os.path.getsize(os.path.join(r.directory, fn))
+            except OSError:
+                pass
+        reg.gauge("tiered_runs", "live static runs").set(len(runs))
+        reg.gauge("tiered_run_bytes",
+                  "on-disk bytes across live static runs").set(total)
 
     def close(self) -> None:
         for run in self._runs:

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import collection_stats, ranking
 from repro.core.vectorized import bm25_topk
 from repro.dist.parallel import ScatterTimings
@@ -105,8 +106,18 @@ class MicroBatcher:
                     batch.append(self._q.get(timeout=remaining))
                 except queue.Empty:
                     break
+            reg = obs.registry()
+            if reg.enabled:
+                reg.gauge("serve_queue_depth",
+                          "requests still queued when a batch launches"
+                          ).set(self._q.qsize())
+                reg.histogram("serve_batch_size",
+                              "requests coalesced per micro-batch",
+                              lo=0.5, hi=1e4, per_decade=40
+                              ).observe(len(batch))
             try:
-                results = self.handler([r for r, _ in batch])
+                with obs.span("serve.batch", size=len(batch)):
+                    results = self.handler([r for r, _ in batch])
                 if len(results) != len(batch):
                     raise RuntimeError(
                         f"handler returned {len(results)} results for a "
@@ -157,7 +168,11 @@ class RetrievalServer:
         self.max_terms = max_terms
         self.max_postings = max_postings
         self._sharded = sharded_native and hasattr(warren, "map_groups")
-        self.timings = ScatterTimings()
+        self.timings = ScatterTimings(site="server")
+        # device shapes already scored: a new (qp, tp, l, nb) tuple means
+        # the jitted scorer compiles again — the counter Autopilot watches
+        # to tell shape-bucket churn from steady-state serving
+        self._seen_shapes: set = set()
         if self._sharded:
             self.stats = None    # the native path re-scatters per batch
         else:
@@ -232,6 +247,17 @@ class RetrievalServer:
         are filtered by the ``s > 0`` result guard."""
         return 1 << max(max(n_docs, self.k) - 1, 0).bit_length()
 
+    def _note_shapes(self, qp: int, tp: int, l: int, nb: int) -> None:
+        """Count first sightings of a device shape bucket — each one is a
+        fresh XLA compile of the jitted scorer."""
+        key = (qp, tp, l, nb, self.k)
+        if key not in self._seen_shapes:
+            self._seen_shapes.add(key)
+            obs.registry().counter(
+                "serve_jit_recompile_total",
+                "distinct (batch, terms, postings, accumulator) device "
+                "shape buckets scored — each costs one XLA compile").inc()
+
     # -- single-index path ------------------------------------------------- #
     def _handle_single(self, queries: List[str]
                        ) -> List[List[Tuple[int, float]]]:
@@ -259,24 +285,27 @@ class RetrievalServer:
             qn, max((e[1] + 1 for e in entries), default=1),
             max((len(e[2]) for e in entries), default=1))
         nb = self._acc_pad(stats.n_docs)
-        doc_idx = np.full((qp, tp, l), nb, np.int32)
-        impacts = np.zeros((qp, tp, l), np.float32)
-        qmask = np.zeros((qp, tp), np.float32)
-        for qi, ti, di, imp in entries:
-            doc_idx[qi, ti, :len(di)] = di
-            impacts[qi, ti, :len(di)] = imp
-            qmask[qi, ti] = 1.0
-        scores, ids = bm25_topk(jnp.asarray(doc_idx), jnp.asarray(impacts),
-                                jnp.asarray(qmask),
-                                n_docs=nb, k=self.k)
-        scores, ids = np.asarray(scores), np.asarray(ids)
+        self._note_shapes(qp, tp, l, nb)
+        with obs.span("device_score"):
+            doc_idx = np.full((qp, tp, l), nb, np.int32)
+            impacts = np.zeros((qp, tp, l), np.float32)
+            qmask = np.zeros((qp, tp), np.float32)
+            for qi, ti, di, imp in entries:
+                doc_idx[qi, ti, :len(di)] = di
+                impacts[qi, ti, :len(di)] = imp
+                qmask[qi, ti] = 1.0
+            scores, ids = bm25_topk(jnp.asarray(doc_idx),
+                                    jnp.asarray(impacts), jnp.asarray(qmask),
+                                    n_docs=nb, k=self.k)
+            scores, ids = np.asarray(scores), np.asarray(ids)
         t_score = time.perf_counter() - t0
         t0 = time.perf_counter()
-        out = []
-        for qi in range(qn):
-            res = [(int(stats.doc_starts[d]), float(s))
-                   for d, s in zip(ids[qi], scores[qi]) if s > 0]
-            out.append(res)
+        with obs.span("merge"):
+            out = []
+            for qi in range(qn):
+                res = [(int(stats.doc_starts[d]), float(s))
+                       for d, s in zip(ids[qi], scores[qi]) if s > 0]
+                out.append(res)
         t_merge = time.perf_counter() - t0
         self.timings.add(scatter=t_scatter, score=t_score, merge=t_merge,
                          queries=qn)
@@ -357,6 +386,7 @@ class RetrievalServer:
             qp, tp, lg = self._pad_sizes(
                 qn, max((len(row) for row in qfeatures), default=1), longest)
             nb = self._acc_pad(ng)
+            self._note_shapes(qp, tp, lg, nb)
             doc_idx = np.full((qp, tp, lg), nb, np.int32)
             impacts = np.zeros((qp, tp, lg), np.float32)
             qmask = np.zeros((qp, tp), np.float32)
@@ -375,19 +405,20 @@ class RetrievalServer:
         # pipelined scoring: jax dispatch is asynchronous, so group g's
         # device top-k computes while group g+1's block is being packed;
         # the np.asarray collection below blocks on all of them at once
-        pending = []
-        for g in range(n_groups):
-            blk = pack_group(g)
-            if blk is None:
-                pending.append(None)
-                continue
-            doc_idx, impacts, qmask, nb = blk
-            pending.append(bm25_topk(
-                jnp.asarray(doc_idx), jnp.asarray(impacts),
-                jnp.asarray(qmask), n_docs=nb, k=k))
-        group_res = [None if p is None
-                     else (np.asarray(p[0]), np.asarray(p[1]))
-                     for p in pending]
+        with obs.span("device_score"):
+            pending = []
+            for g in range(n_groups):
+                blk = pack_group(g)
+                if blk is None:
+                    pending.append(None)
+                    continue
+                doc_idx, impacts, qmask, nb = blk
+                pending.append(bm25_topk(
+                    jnp.asarray(doc_idx), jnp.asarray(impacts),
+                    jnp.asarray(qmask), n_docs=nb, k=k))
+            group_res = [None if p is None
+                         else (np.asarray(p[0]), np.asarray(p[1]))
+                         for p in pending]
         t_score = time.perf_counter() - t0
         # gather: global k-way merge; per-group lists come out of top_k
         # sorted by (-score, doc index) = (-score, address) within a group,
@@ -395,19 +426,20 @@ class RetrievalServer:
         # the single-index tie order no matter how rebalancing has
         # interleaved group address ranges
         t0 = time.perf_counter()
-        out = []
-        for qi in range(qn):
-            runs = []
-            for g, res in enumerate(group_res):
-                if res is None:
-                    continue
-                sc, ids = res
-                runs.append([(-float(s), int(per[g].doc_starts[int(d)]))
-                             for s, d in zip(sc[qi], ids[qi]) if s > 0])
-            merged = heapq.merge(*runs)   # key: (-score, address)
-            row = [(addr, -neg_s)
-                   for neg_s, addr in itertools.islice(merged, k)]
-            out.append(row)
+        with obs.span("merge"):
+            out = []
+            for qi in range(qn):
+                runs = []
+                for g, res in enumerate(group_res):
+                    if res is None:
+                        continue
+                    sc, ids = res
+                    runs.append([(-float(s), int(per[g].doc_starts[int(d)]))
+                                 for s, d in zip(sc[qi], ids[qi]) if s > 0])
+                merged = heapq.merge(*runs)   # key: (-score, address)
+                row = [(addr, -neg_s)
+                       for neg_s, addr in itertools.islice(merged, k)]
+                out.append(row)
         t_merge = time.perf_counter() - t0
         self.timings.add(scatter=t_scatter, score=t_score, merge=t_merge,
                          queries=qn)

@@ -1,0 +1,372 @@
+"""repro.obs: metric primitives, registry, tracing, bench emission.
+
+Covers the concurrency contract (16-thread hammers with exact totals),
+trace-context propagation across the ScatterGather pool, the span-tree
+acceptance path through the native sharded server, disabled-mode no-ops,
+ScatterTimings windowing, and the BENCH_* schema round-trip."""
+
+import json
+import math
+import threading
+
+import pytest
+
+from repro import obs
+from repro.obs import (Counter, Gauge, Histogram, JsonlSink, MetricsRegistry,
+                       Tracer, sanitize)
+from repro.obs import bench as obs_bench
+
+
+@pytest.fixture(autouse=True)
+def _clean_global_obs():
+    """Tests share the process-global registry/tracer: start clean,
+    leave enabled for whoever runs next."""
+    obs.enable()
+    obs.registry().reset()
+    obs.tracer().reset()
+    obs.tracer().set_slow_dump(None, None)
+    yield
+    obs.enable()
+    obs.tracer().set_slow_dump(None, None)
+
+
+# --------------------------------------------------------------------- #
+# primitives                                                            #
+# --------------------------------------------------------------------- #
+
+def test_histogram_percentiles_uniform():
+    h = Histogram()
+    for v in range(1, 1001):
+        h.observe(float(v))
+    # log buckets at 20/decade => ~12% relative resolution
+    assert h.percentile(0.5) == pytest.approx(500, rel=0.15)
+    assert h.percentile(0.95) == pytest.approx(950, rel=0.15)
+    assert h.percentile(0.99) == pytest.approx(990, rel=0.15)
+    snap = h.snapshot()
+    assert snap["count"] == 1000
+    assert snap["min"] == 1.0 and snap["max"] == 1000.0
+    assert snap["p50"] <= snap["p95"] <= snap["p99"] <= snap["max"]
+
+
+def test_histogram_empty_and_clamping():
+    h = Histogram()
+    assert math.isnan(h.percentile(0.5))
+    h.observe(7.0)
+    # single sample: every percentile must clamp to the one observation
+    assert h.percentile(0.5) == 7.0
+    assert h.percentile(0.99) == 7.0
+    h.observe(0.0)       # underflow bucket (v <= lo)
+    assert h.count == 2
+    h.reset()
+    assert h.count == 0 and math.isnan(h.percentile(0.5))
+
+
+def test_counter_hammer_16_threads():
+    c = Counter()
+    n, per = 16, 5000
+
+    def worker():
+        for _ in range(per):
+            c.inc()
+
+    ts = [threading.Thread(target=worker) for _ in range(n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert c.value == n * per
+
+
+def test_histogram_hammer_16_threads():
+    h = Histogram()
+    n, per = 16, 2000
+
+    def worker(tid):
+        for i in range(per):
+            h.observe(1.0 + (tid * per + i) % 100)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    snap = h.snapshot()
+    assert snap["count"] == n * per
+    assert snap["min"] >= 1.0 and snap["max"] <= 100.0
+
+
+def test_registry_get_or_create_hammer():
+    reg = MetricsRegistry()
+    n, per = 16, 1000
+
+    def worker(tid):
+        for _ in range(per):
+            # same (name, labels) from every thread -> one series
+            reg.counter("hammer_total", group=tid % 4).inc()
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    snap = reg.snapshot()["hammer_total"]
+    assert len(snap["series"]) == 4
+    assert sum(s["value"] for s in snap["series"]) == n * per
+
+
+def test_registry_kind_mismatch_raises():
+    reg = MetricsRegistry()
+    reg.counter("x_total").inc()
+    with pytest.raises(ValueError, match="counter"):
+        reg.gauge("x_total")
+
+
+def test_disabled_mode_is_a_noop():
+    reg = MetricsRegistry(enabled=False)
+    c = reg.counter("c")
+    h = reg.histogram("h")
+    g = reg.gauge("g")
+    c.inc(10)
+    h.observe(5.0)
+    g.set(3.0)
+    assert c.value == 0 and h.count == 0 and g.value == 0.0
+    reg.enable()
+    c.inc()
+    assert c.value == 1
+
+
+def test_prometheus_and_jsonl_exports(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("reads_total", "reads", group=0).inc(3)
+    reg.histogram("lat_ms", "latency", site="s").observe(2.5)
+    reg.gauge("depth").set(float("nan"))     # must not break JSON export
+    text = reg.to_prometheus()
+    assert 'reads_total{group="0"} 3' in text
+    assert 'lat_ms{quantile="0.95",site="s"}' in text
+    assert 'lat_ms_count{site="s"} 1' in text
+    p = tmp_path / "m.jsonl"
+    rec = JsonlSink(str(p)).write(reg)
+    parsed = json.loads(p.read_text())       # strictly valid JSON
+    assert parsed["metrics"]["reads_total"]["series"][0]["value"] == 3
+    assert parsed["metrics"]["depth"]["series"][0]["value"] is None
+    assert rec["metrics"]["lat_ms"]["series"][0]["count"] == 1
+
+
+def test_sanitize_nonfinite():
+    assert sanitize({"a": float("inf"), "b": [float("nan"), 1.5]}) == \
+        {"a": None, "b": [None, 1.5]}
+
+
+# --------------------------------------------------------------------- #
+# tracing                                                               #
+# --------------------------------------------------------------------- #
+
+def test_span_nesting_and_tree():
+    tr = Tracer()
+    with tr.span("root", req=1):
+        with tr.span("child_a"):
+            with tr.span("leaf"):
+                pass
+        with tr.span("child_b"):
+            pass
+    t = tr.last_trace("root")
+    assert t is not None
+    tree = t.tree()
+    assert tree["name"] == "root" and tree["labels"] == {"req": 1}
+    assert [c["name"] for c in tree["children"]] == ["child_a", "child_b"]
+    assert tree["children"][0]["children"][0]["name"] == "leaf"
+    assert tree["duration_ms"] is not None and tree["duration_ms"] >= 0
+
+
+def test_span_error_flag_propagates_exception():
+    tr = Tracer()
+    with pytest.raises(RuntimeError):
+        with tr.span("root"):
+            with tr.span("boom"):
+                raise RuntimeError("x")
+    tree = tr.last_trace("root").tree()
+    assert tree["error"] is True
+    assert tree["children"][0]["error"] is True
+
+
+def test_disabled_tracer_returns_shared_null():
+    tr = Tracer(enabled=False)
+    a, b = tr.span("x"), tr.span("y", k=1)
+    assert a is b                      # shared no-op, no allocation
+    with a:
+        pass
+    assert tr.traces() == []
+
+
+def test_trace_propagation_across_scattergather():
+    from repro.dist.parallel import ScatterGather
+    tr = obs.tracer()
+    with ScatterGather(workers=4) as sg:
+        with obs.span("fanout.root"):
+            sg.map(_traced_work, list(range(6)))
+    t = tr.last_trace("fanout.root")
+    assert t is not None
+    tree = t.tree()
+    kids = [c for c in tree["children"] if c["name"] == "work"]
+    # every worker-side span parented under the submitting context's root
+    assert sorted(c["labels"]["group"] for c in kids) == list(range(6))
+
+
+def _traced_work(g):
+    with obs.span("work", group=g):
+        return g
+
+
+def test_slow_trace_dump(tmp_path):
+    tr = Tracer()
+    p = tmp_path / "slow.jsonl"
+    tr.set_slow_dump(0.0, str(p))          # everything is "slow"
+    with tr.span("req"):
+        with tr.span("inner"):
+            pass
+    assert tr.n_slow_dumped == 1
+    rec = json.loads(p.read_text())
+    assert rec["root"] == "req"
+    assert [s["name"] for s in rec["spans"]] == ["req", "inner"]
+
+
+# --------------------------------------------------------------------- #
+# ScatterTimings windowing (the lifetime-average fix)                   #
+# --------------------------------------------------------------------- #
+
+def test_scatter_timings_window_and_epoch():
+    from repro.dist.parallel import ScatterTimings
+    st = ScatterTimings(site="test")
+    st.add(scatter=0.010, score=0.020, merge=0.001)
+    st.add(scatter=0.030, score=0.040, merge=0.002, queries=2)
+    w = st.window()
+    assert w["epoch"] == 0
+    assert w["queries"] == 3
+    assert w["scatter_s"] == pytest.approx(0.040)
+    # window() reset the sums: a fresh window sees only new samples
+    st.add(scatter=0.005)
+    s = st.snapshot()
+    assert s["epoch"] == 1
+    assert s["queries"] == 1 and s["scatter_s"] == pytest.approx(0.005)
+    # ...but the obs histograms keep the full trajectory
+    h = obs.registry().histogram("serve_scatter_latency_ms", site="test")
+    assert h.count == 3
+
+
+# --------------------------------------------------------------------- #
+# bench schema                                                          #
+# --------------------------------------------------------------------- #
+
+def test_bench_emit_validate_roundtrip(tmp_path):
+    reg = MetricsRegistry()
+    st_like = reg.histogram("serve_scatter_latency_ms", site="unit")
+    for v in (1.0, 2.0, 3.0):
+        st_like.observe(v)
+    reg.histogram("serve_score_latency_ms", site="unit").observe(5.0)
+    reg.histogram("serve_merge_latency_ms", site="unit").observe(0.5)
+    p = tmp_path / "BENCH_serving.json"
+    doc = obs_bench.emit(str(p), "serving",
+                         extra={"bench": {"smoke": True}}, reg=reg)
+    assert doc["schema"] == obs_bench.SCHEMA
+    assert obs_bench.validate(str(p)) == []
+    s = doc["metrics"]["serve_scatter_latency_ms"]["series"][0]
+    assert s["count"] == 3 and {"p50", "p95", "p99"} <= set(s)
+    assert obs_bench.main(["validate", str(p)]) == 0
+
+
+def test_bench_refuses_invalid(tmp_path):
+    # no serving histograms at all -> must refuse, must not write
+    p = tmp_path / "BENCH_serving.json"
+    with pytest.raises(ValueError, match="refusing"):
+        obs_bench.emit(str(p), "serving", reg=MetricsRegistry())
+    assert not p.exists()
+    with pytest.raises(ValueError):
+        obs_bench.emit(str(p), "nonsense-kind")
+    # hand-broken doc fails validation
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema": "other/v9", "kind": "serving",
+                               "created": 0, "metrics": {}}))
+    problems = obs_bench.validate(str(bad))
+    assert problems
+    assert obs_bench.main(["validate", str(bad)]) == 1
+
+
+# --------------------------------------------------------------------- #
+# instrumented subsystems                                               #
+# --------------------------------------------------------------------- #
+
+def test_txn_commit_metrics():
+    from repro.core import DynamicIndex, Warren, index_document
+    reg = obs.registry()
+    with Warren(DynamicIndex()) as w:
+        for i in range(3):
+            w.transaction()
+            index_document(w, f"doc number {i} words here", docid=f"d{i}")
+            w.commit()
+    h = reg.histogram("txn_commit_latency_ms")
+    assert h.count >= 3
+    assert h.sum > 0
+
+
+def test_sharded_span_tree_and_metrics(tmp_path):
+    """Acceptance: one search through the native sharded server yields the
+    complete span tree and populates the serving metric families."""
+    from repro.core import index_document
+    from repro.dist.shard_router import ShardedWarren
+    from repro.train.serve import RetrievalServer
+
+    reg, tr = obs.registry(), obs.tracer()
+    warren = ShardedWarren(n_shards=3, replicas=1,
+                           static_dir=str(tmp_path), async_scatter=True)
+    try:
+        with warren:
+            warren.transaction()
+            for i in range(40):
+                index_document(
+                    warren,
+                    f"school education student wind conductor item{i}",
+                    docid=f"d{i}")
+            warren.commit()
+        server = RetrievalServer(warren, k=5)
+        try:
+            out = server.batcher.submit("school education").get(timeout=60)
+        finally:
+            server.close()
+        assert len(out) > 0
+    finally:
+        warren.close()
+
+    t = tr.last_trace("serve.batch")
+    assert t is not None, "no serve.batch trace captured"
+    names = set(t.names())
+    assert {"serve.batch", "scatter", "replica_read",
+            "device_score", "merge"} <= names
+    tree = t.tree()
+    scatters = [c for c in tree["children"] if c["name"] == "scatter"]
+    assert sorted(s["labels"]["group"] for s in scatters) == [0, 1, 2]
+    for s in scatters:
+        assert any(k["name"] == "replica_read" for k in s["children"])
+
+    # metric families the sweep must have fed
+    snap = reg.snapshot()
+    for fam in ("serve_scatter_latency_ms", "serve_score_latency_ms",
+                "serve_merge_latency_ms", "scatter_latency_ms",
+                "shard_read_total", "shard_write_total",
+                "txn_quorum_wait_ms", "serve_batch_size",
+                "serve_jit_recompile_total"):
+        assert fam in snap, f"missing family {fam}"
+        assert snap[fam]["series"], f"empty family {fam}"
+    server_h = reg.histogram("serve_scatter_latency_ms", site="server")
+    assert server_h.count >= 1
+
+
+def test_obs_disable_silences_instrumentation(tmp_path):
+    from repro.core import DynamicIndex, Warren, index_document
+    obs.disable()
+    before = obs.registry().histogram("txn_commit_latency_ms").count
+    with Warren(DynamicIndex()) as w:
+        w.transaction()
+        index_document(w, "quiet doc", docid="q0")
+        w.commit()
+    assert obs.registry().histogram("txn_commit_latency_ms").count == before
+    assert obs.tracer().span("x") is obs.tracer().span("y")
