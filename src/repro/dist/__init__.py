@@ -9,6 +9,10 @@
   rebalance     live shard rebalancing: split/merge replica groups by
                 streaming segments, without pausing writers
   parallel      ScatterGather worker pool + serving time breakdown
+  autopilot     closed-loop control plane: Controller + policies that
+                drive split/merge/demote/re-sync from live signals
+  simharness    deterministic day-in-the-life simulation (SimClock,
+                SimCluster, DriftingWorkload) for tests and benchmarks
 
 Submodules are imported lazily so that pulling in one (e.g. compression,
 jax-only) never drags the whole index stack along.
@@ -17,7 +21,8 @@ jax-only) never drags the whole index stack along.
 import importlib
 
 _SUBMODULES = ("compression", "checkpoint", "elastic", "sharding",
-               "shard_router", "parallel", "rebalance")
+               "shard_router", "parallel", "rebalance", "autopilot",
+               "simharness")
 
 _LAZY_NAMES = {
     "ShardedWarren": "shard_router",
@@ -27,6 +32,13 @@ _LAZY_NAMES = {
     "ScatterTimings": "parallel",
     "Rebalancer": "rebalance",
     "RebalanceStats": "rebalance",
+    "Controller": "autopilot",
+    "AutopilotConfig": "autopilot",
+    "Decision": "autopilot",
+    "GroupSignal": "autopilot",
+    "SimClock": "simharness",
+    "SimCluster": "simharness",
+    "DriftingWorkload": "simharness",
 }
 
 __all__ = list(_SUBMODULES) + list(_LAZY_NAMES)

@@ -154,3 +154,22 @@ def merge_shard_groups(warren, dest: int, source: int, pool=None) -> None:
     from repro.dist.rebalance import Rebalancer
 
     Rebalancer(warren, pool=pool).merge_groups(dest, source)
+
+
+def autopilot(warren, config=None, interval_s: float = 5.0,
+              decision_log: Optional[str] = None):
+    """Close the loop: start an autopilot controller over a live
+    ShardedWarren and return ``(controller, stop_event)``.
+
+    The controller ticks every ``interval_s`` seconds on a daemon thread,
+    splitting hot groups, demoting and merging cold ones, and re-syncing
+    diverged replicas — the manual `split_shard_group`/`merge_shard_groups`
+    calls above, driven by policy instead of by an operator.  Set the
+    stop event (or drop the warren) to halt it.  See
+    :mod:`repro.dist.autopilot` for the policy knobs."""
+    from repro.dist.autopilot import Controller
+
+    ctl = Controller.for_warren(warren, config=config,
+                                decision_log=decision_log)
+    stop = ctl.spawn(interval_s)
+    return ctl, stop

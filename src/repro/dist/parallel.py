@@ -130,14 +130,45 @@ class ScatterGather:
     """Worker pool for ordered per-group fan-out.
 
     A closed (or single-item) scatter degrades to the caller-thread loop,
-    so holders never have to guard their fan-outs on pool lifetime.
+    so holders never have to guard their fan-outs on pool lifetime.  The
+    pool is elastic: ``resize`` swaps in a new worker width on a live pool
+    (the autopilot drives this as the group count changes) without
+    dropping or blocking in-flight fan-outs.
     """
 
     def __init__(self, workers: Optional[int] = None):
         self.workers = workers if workers else min(16, os.cpu_count() or 4)
         self._pool = ThreadPoolExecutor(max_workers=self.workers,
                                         thread_name_prefix="scatter")
+        self._lifecycle = threading.Lock()   # serializes resize/close
         self._closed = False
+
+    def resize(self, workers: int) -> None:
+        """Grow or shrink the worker count on a LIVE pool.
+
+        A fresh executor with the new width is published first and the old
+        one is retired with ``shutdown(wait=False)`` — already-submitted
+        work keeps running on the old threads until done, so in-flight
+        fan-outs always complete; only *new* fan-outs land on the new
+        width.  A ``run`` that raced the swap and submitted into the
+        retired executor falls back to running those thunks inline (the
+        same degrade path ``close`` uses).  No-op when the requested width
+        matches or the pool is closed.
+        """
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        with self._lifecycle:
+            if self._closed or workers == self.workers:
+                return
+            old = self._pool
+            self._pool = ThreadPoolExecutor(max_workers=workers,
+                                            thread_name_prefix="scatter")
+            self.workers = workers
+            old.shutdown(wait=False)
+        reg = registry()
+        if reg.enabled:
+            reg.gauge("scatter_pool_workers",
+                      "current ScatterGather worker count").set(workers)
 
     def run(self, thunks: Sequence[Callable[[], Any]]) -> List[Any]:
         """Run thunks concurrently; results in input order.
@@ -182,8 +213,9 @@ class ScatterGather:
         return self.run([lambda it=it: fn(it) for it in items])
 
     def close(self) -> None:
-        self._closed = True
-        self._pool.shutdown(wait=False)
+        with self._lifecycle:
+            self._closed = True
+            self._pool.shutdown(wait=False)
 
     def __enter__(self) -> "ScatterGather":
         return self

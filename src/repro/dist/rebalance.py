@@ -149,6 +149,15 @@ class Rebalancer:
                           "writer stall of the atomic swap window"
                           ).observe(1e3 * stats.swap_s)
 
+    def _record_abort(self, kind: str) -> None:
+        """Count an aborted migration — the signal the autopilot's
+        backoff policy watches (the routing table was left untouched)."""
+        reg = obs.registry()
+        if reg.enabled:
+            reg.counter("rebalance_aborted_total",
+                        "migrations aborted with the table unchanged",
+                        kind=kind).inc()
+
     # ------------------------------------------------------------------ #
     def _hook(self, stage: str, gid: int) -> None:
         hook = self.warren.hooks.get("mid_migration")
@@ -244,6 +253,9 @@ class Rebalancer:
             try:
                 with obs.span("rebalance.split", source=source):
                     return self._split_locked(grp, table, pivot)
+            except RebalanceAborted:
+                self._record_abort("split")
+                raise
             finally:
                 for idx in grp.replicas:
                     idx.set_merge_fence(-1)
@@ -393,9 +405,13 @@ class Rebalancer:
             dgrp, sgrp = self._group(dest), self._group(source)
             table: RoutingTable = w._ctx["table"]
             if dgrp.demoted is not None and sgrp.demoted is not None:
-                with obs.span("rebalance.merge", source=source, dest=dest,
-                              demoted=True):
-                    self._merge_demoted_locked(dgrp, sgrp, table)
+                try:
+                    with obs.span("rebalance.merge", source=source,
+                                  dest=dest, demoted=True):
+                        self._merge_demoted_locked(dgrp, sgrp, table)
+                except RebalanceAborted:
+                    self._record_abort("merge-demoted")
+                    raise
                 return
             # mixed hot/cold: promote the cold side, then merge hot
             if dgrp.demoted is not None:
@@ -407,6 +423,9 @@ class Rebalancer:
             try:
                 with obs.span("rebalance.merge", source=source, dest=dest):
                     self._merge_locked(dgrp, sgrp, table)
+            except RebalanceAborted:
+                self._record_abort("merge")
+                raise
             finally:
                 for idx in sgrp.replicas:
                     idx.set_merge_fence(-1)

@@ -275,6 +275,47 @@ class ReplicaGroup:
     def mark_failed(self, replica: int) -> None:
         self.alive[replica] = False
 
+    # -- control-plane signals (read by repro.dist.autopilot) --------- #
+    def replica_seqnums(self) -> List[int]:
+        """Per-replica committed seqnum high-water mark (-1 = empty).
+
+        Under the fail-stop model live replicas are in lockstep, so any
+        spread between *live* marks is divergence the autopilot's
+        anti-entropy policy schedules a re-sync for.  Dead replicas report
+        their last published mark; a demoted group's replicas report -1
+        (their state lives in the run set, not hot segments)."""
+        out = []
+        for idx in self.replicas:
+            with idx._publish_lock:
+                segs = idx._segments
+            out.append(max((s.seqnum for s in segs), default=-1))
+        return out
+
+    def doc_count(self) -> int:
+        """Committed (non-erased) document count of this group — the
+        skew signal hot-split policies balance on.  Served from the first
+        live replica (or the static run set when demoted); retired groups
+        count zero."""
+        from repro.core.ranking import DOC_FEATURE
+
+        if self.retired:
+            return 0
+        if self.demoted is not None:
+            st = self.static
+            if st is not None:
+                w = st.clone()
+                w.start()
+                try:
+                    return len(w.annotations(DOC_FEATURE))
+                finally:
+                    w.end()
+        w = Warren(self.replicas[self.first_alive()])
+        w.start()
+        try:
+            return len(w.annotations(DOC_FEATURE))
+        finally:
+            w.end()
+
     # -- cold demotion ----------------------------------------------- #
     def demote(self, directory: str) -> None:
         """Freeze this group into a static run set + manifest and drop the
@@ -602,6 +643,15 @@ class ShardedWarren:
 
     def health(self) -> List[List[bool]]:
         return [list(g.alive) for g in self.groups]
+
+    # -- control-plane signals (read by repro.dist.autopilot) ------------ #
+    def group_doc_counts(self) -> List[int]:
+        """Committed document count per group (0 for retired groups)."""
+        return [g.doc_count() for g in self.groups]
+
+    def group_seqnums(self) -> List[List[int]]:
+        """Per-group, per-replica committed seqnum high-water marks."""
+        return [g.replica_seqnums() for g in self.groups]
 
     # -- cold demotion ----------------------------------------------------- #
     def _group_static_dir(self, group: int,

@@ -2,7 +2,7 @@
 
 ``emit()`` freezes the current registry snapshot into a ``BENCH_*.json``
 file stamped with ``schema = "repro.bench/v1"`` and a *kind* (serving /
-build / kernels).  Committing those files turns git history into the
+build / kernels / autopilot).  Committing those files turns git history into the
 repo's performance trajectory: any PR that moves p95 scatter latency or
 kernel roofline fraction shows up as a diff on a tracked file rather
 than a silent regression.
@@ -23,7 +23,7 @@ from typing import Dict, List, Optional, Tuple
 from .registry import MetricsRegistry, registry, sanitize
 
 SCHEMA = "repro.bench/v1"
-KINDS = ("serving", "build", "kernels")
+KINDS = ("serving", "build", "kernels", "autopilot")
 
 # Per-kind required metric families; histograms must carry percentiles.
 REQUIRED: Dict[str, Tuple[str, ...]] = {
@@ -31,6 +31,7 @@ REQUIRED: Dict[str, Tuple[str, ...]] = {
                 "serve_merge_latency_ms"),
     "build": ("build_docs_per_s",),
     "kernels": ("kernel_achieved_gflops",),
+    "autopilot": ("autopilot_actions_total", "autopilot_tick_ms"),
 }
 _HIST_KEYS = ("count", "p50", "p95", "p99")
 

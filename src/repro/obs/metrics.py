@@ -175,6 +175,39 @@ class Histogram:
         with self._lock:
             return self._percentile_locked(p)
 
+    # -- windowed reads (delta between two bucket snapshots) ------------- #
+    def bucket_counts(self) -> List[int]:
+        """Point-in-time copy of the raw bucket counts.  Pair with
+        :meth:`percentile_since` to read *windowed* percentiles out of a
+        cumulative histogram: take the counts at window start, then ask
+        for the percentile of everything observed since."""
+        with self._lock:
+            return list(self._counts)
+
+    def percentile_since(self, prev_counts: Optional[Sequence[int]],
+                         p: float) -> float:
+        """Percentile over the observations added since ``prev_counts``
+        was captured with :meth:`bucket_counts` (``None`` = since the
+        beginning).  NaN when the window holds no samples.  Exact to
+        bucket resolution, like :meth:`percentile`."""
+        with self._lock:
+            cur = list(self._counts)
+        if prev_counts is None:
+            prev_counts = [0] * len(cur)
+        if len(prev_counts) != len(cur):
+            raise ValueError("bucket snapshot from a different histogram")
+        delta = [c - q for c, q in zip(cur, prev_counts)]
+        total = sum(delta)
+        if total <= 0:
+            return math.nan
+        target = p * total
+        seen = 0
+        for i, c in enumerate(delta):
+            seen += c
+            if seen >= target and c > 0:
+                return self._bucket_mid(i)
+        return self._bucket_mid(len(delta) - 1)
+
     def _percentile_locked(self, p: float) -> float:
         if self._count == 0:
             return math.nan

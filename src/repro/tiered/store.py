@@ -452,7 +452,20 @@ class TieredWarren(_SnapshotReads):
 def demote_index(index: DynamicIndex, directory: str) -> Manifest:
     """Freeze an entire DynamicIndex into a static run set + manifest
     (the cold form of a ShardedWarren replica group).  Safe to re-demote
-    into the same directory: versions increase, old runs are GC'd."""
+    into the same directory: versions increase, old runs are GC'd.
+
+    Emits ``tiered_demote_total`` and a ``tiered.demote`` span — the
+    demotion half of the lifecycle signal pair the autopilot's cold
+    policy acts through (``tiered_promote_total`` is the other half)."""
+    reg = obs.registry()
+    if reg.enabled:
+        reg.counter("tiered_demote_total",
+                    "groups frozen to static run sets").inc()
+    with obs.span("tiered.demote", directory=directory):
+        return _demote_index(index, directory)
+
+
+def _demote_index(index: DynamicIndex, directory: str) -> Manifest:
     ms = ManifestStore(directory)
     prev = ms.load_latest_good() or Manifest.initial()
     with index._durable_lock:
@@ -484,7 +497,12 @@ def resurrect_index(directory: str, tokenizer: Optional[Tokenizer] = None,
                     n: int = 1) -> List[DynamicIndex]:
     """Rebuild ``n`` lockstep DynamicIndex replicas from a demoted run set,
     streaming each run back through the durable ``Segment.to_record`` form
-    so every replica owns its state."""
+    so every replica owns its state.  Emits ``tiered_promote_total`` —
+    the promotion half of the demotion lifecycle signal pair."""
+    reg = obs.registry()
+    if reg.enabled:
+        reg.counter("tiered_promote_total",
+                    "groups rebuilt hot from static run sets").inc()
     ms = ManifestStore(directory)
     m = ms.load_latest_good()
     if m is None:

@@ -1,0 +1,111 @@
+"""Canned autopilot scenarios on top of repro.dist.simharness.
+
+The harness proper (SimClock / SimCluster / DriftingWorkload /
+ScriptedSignals) lives in ``src/repro/dist/simharness.py`` so the
+benchmarks import it too; this module is the thin test-side layer:
+signal shorthand, a recording actuator with failure injection, tight
+deterministic controller configs, and the drive loop the tier-1 tests
+and the property test share.  Nothing here reads the wall clock.
+"""
+
+import math
+
+from repro.dist.autopilot import (AntiEntropyPolicy, AutopilotConfig,
+                                  ColdPolicy, Controller, GroupSignal,
+                                  Hysteresis, HotSplitPolicy, RetryPolicy,
+                                  ScriptedSignals)
+from repro.dist.rebalance import RebalanceAborted
+from repro.dist.simharness import SimClock
+
+
+def sig(group, docs=100, p95=math.nan, reads=10, writes=0,
+        demoted=False, retired=False, seqs=(5, 5), alive=(True, True)):
+    """GroupSignal shorthand for scripted scenarios."""
+    return GroupSignal(group=group, docs=docs, p95_ms=p95, reads=reads,
+                       writes=writes, demoted=demoted, retired=retired,
+                       replica_seqs=tuple(seqs), alive=tuple(alive))
+
+
+class RecordingActuator:
+    """Pure actuator: records calls, applies no mechanism.  ``split``
+    hands out fresh group ids; ``fail_kinds`` makes those action kinds
+    raise RebalanceAborted (always, or the next N times via
+    ``fail_budget``) to exercise the backoff path."""
+
+    def __init__(self, next_gid=1, fail_kinds=(), fail_budget=None):
+        self.calls = []
+        self._next_gid = next_gid
+        self.fail_kinds = set(fail_kinds)
+        self.fail_budget = fail_budget
+
+    def _maybe_fail(self, kind):
+        if kind in self.fail_kinds:
+            if self.fail_budget is None:
+                raise RebalanceAborted(f"injected {kind} abort")
+            if self.fail_budget > 0:
+                self.fail_budget -= 1
+                raise RebalanceAborted(f"injected {kind} abort")
+
+    def split(self, group):
+        self.calls.append(("split", group))
+        self._maybe_fail("split")
+        gid = self._next_gid
+        self._next_gid += 1
+        return gid
+
+    def merge(self, dest, source):
+        self.calls.append(("merge", dest, source))
+        self._maybe_fail("merge")
+
+    def demote(self, group):
+        self.calls.append(("demote", group))
+        self._maybe_fail("demote")
+
+    def resync(self, group, replica):
+        self.calls.append(("resync", group, replica))
+        self._maybe_fail("resync")
+
+    @property
+    def applied(self):
+        return list(self.calls)
+
+
+def tight_config(**overrides):
+    """The deterministic scenario config every canned test shares: short
+    sustains and cooldowns so sequences resolve in a handful of ticks."""
+    kw = dict(
+        split=HotSplitPolicy(p95_hot_ms=50.0, skew_ratio=3.0, min_docs=10,
+                             sustain_ticks=3, max_groups=8),
+        cold=ColdPolicy(idle_reads=0, demote_after_ticks=3,
+                        merge_after_ticks=6, min_groups=2),
+        anti_entropy=AntiEntropyPolicy(max_seq_lag=0, sustain_ticks=2),
+        hysteresis=Hysteresis(cooldown_ticks=4, min_dwell_ticks=1,
+                              window_ticks=20, max_actions_per_window=8),
+        retry=RetryPolicy(base_ticks=1, cap_ticks=8),
+        pool=None,
+    )
+    kw.update(overrides)
+    return AutopilotConfig(**kw)
+
+
+def run_scripted(ticks, config=None, actuator=None, n_ticks=None):
+    """Drive a controller over a scripted signal schedule; returns
+    (controller, actuator).  ``n_ticks`` defaults to the script length
+    (the last tick's signals hold if you ask for more)."""
+    clock = SimClock()
+    act = actuator if actuator is not None else RecordingActuator(
+        next_gid=max(s.group for t in ticks for s in t) + 1)
+    ctl = Controller(ScriptedSignals(ticks), act,
+                     config=config if config is not None else tight_config(),
+                     clock=clock)
+    for _ in range(n_ticks if n_ticks is not None else len(ticks)):
+        ctl.tick()
+        clock.advance()
+    return ctl, act
+
+
+def decision_seq(ctl):
+    """The compact (tick, kind, group, target, outcome) sequence the
+    exact-scenario tests assert against."""
+    return [(d.tick, d.kind, d.group, d.target, d.outcome)
+            for d in ctl.decisions]
