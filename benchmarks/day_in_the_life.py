@@ -1,6 +1,6 @@
 """A day in the life of an autopiloted warren: closed loop vs no policy.
 
-Two passes, one report:
+Three passes, one report:
 
 1. **Simulated day** (deterministic, seeded).  A ``DriftingWorkload``
    (Zipf-over-topics traffic whose hot spot migrates each phase) drives a
@@ -11,6 +11,15 @@ Two passes, one report:
    no-policy baseline degrades more — the run FAILS (non-zero exit) if
    either half of that claim breaks.  Fully reproducible per seed.
 
+1b. **Burn-driven day**.  The same drifting traffic, but the raw p95
+   split trigger is disabled and the controller acts only on the serving
+   SLO's *sustained burn rate*: the sim cluster feeds its modeled
+   latencies into the real ``scatter_latency_ms{group}`` histograms, an
+   ``obs.SLOMonitor`` (on the sim clock, tick-denominated windows)
+   computes multi-window ``slo_burn_rate``, and
+   ``HotSplitPolicy.burn_hot`` fires the splits.  The run FAILS unless
+   at least one burn-attributed split is applied.
+
 2. **Real-warren pass**.  A live ``ShardedWarren`` under the controller
    (real ``WarrenSignals``/``WarrenActuator``, fake clock): traffic heats
    the groups, the controller splits, a replica is killed and
@@ -18,9 +27,10 @@ Two passes, one report:
    with served rankings checked bit-identical to a single-index oracle
    after every action.
 
-``--smoke`` shrinks both passes to CI size; ``--emit-bench PATH`` writes
+``--smoke`` shrinks all passes to CI size; ``--emit-bench PATH`` writes
 a schema-versioned ``BENCH_autopilot.json`` (repro.bench/v1) carrying the
-``autopilot_*`` metric families plus the p95 trajectories.
+``autopilot_*`` and ``slo_burn_rate`` metric families plus the p95
+trajectories.
 """
 
 import math
@@ -108,6 +118,63 @@ def sim_day(seed: int, ticks: int, flatness: float) -> dict:
             "decisions": by_outcome,
             "p95_trajectory_controller_ms": [round(x, 3) for x in worst_ctl],
             "p95_trajectory_baseline_ms": [round(x, 3) for x in worst_base]}
+
+
+# ------------------------------------------------------------------ #
+# pass 1b: the burn-driven day — autopilot acting on slo_burn_rate
+# ------------------------------------------------------------------ #
+def burn_day(seed: int, ticks: int) -> dict:
+    clock = SimClock()
+    cluster = SimCluster(docs=1200, base_ms=2.0, ms_per_doc=0.05,
+                         observe_latency=True)
+    wl = DriftingWorkload(seed=seed, topics=48, reads_per_tick=120,
+                          writes_per_tick=8,
+                          phase_ticks=max(ticks // 3, 10))
+    monitor = obs.SLOMonitor(
+        slos=[obs.SLO(name="serving_p95", kind="latency", objective=0.95,
+                      metric="scatter_latency_ms", threshold_ms=40.0)],
+        windows=(("short", 5.0), ("long", 20.0)), clock=clock)
+    cfg = AutopilotConfig(
+        # raw p95 and skew triggers OFF: only sustained burn splits
+        split=HotSplitPolicy(p95_hot_ms=math.inf, skew_ratio=math.inf,
+                             min_docs=64, sustain_ticks=3, max_groups=8,
+                             burn_hot=1.0),
+        cold=ColdPolicy(demote_after_ticks=15, merge_after_ticks=40,
+                        min_groups=2),
+        hysteresis=Hysteresis(cooldown_ticks=4, min_dwell_ticks=1,
+                              window_ticks=30, max_actions_per_window=6),
+        pool=None)
+    ctl = Controller(obs.SLOSignalSource(cluster, monitor), cluster,
+                     config=cfg, clock=clock)
+    t0 = time.time()
+    for _ in range(ticks):
+        reads, writes = wl.tick_keys()
+        cluster.route(reads)
+        cluster.ingest(writes)
+        ctl.tick()
+        clock.advance()
+    wall = time.time() - t0
+
+    burn_splits = [d for d in ctl.decisions
+                   if d.kind == "split" and d.outcome == "applied"
+                   and "burn" in d.reason]
+    print(f"# burn-driven day: seed {seed}, {ticks} ticks, "
+          f"{len(cluster.active())} active groups at close, "
+          f"{len(burn_splits)} burn-driven splits ({wall:.2f}s)")
+    if burn_splits:
+        print(f"  first: {burn_splits[0].summary()}")
+    print(f"  sustained serving burn at close: "
+          f"{monitor.burn('serving_p95'):.2f}")
+    ok = len(burn_splits) > 0
+    print(f"  autopilot acted on slo_burn_rate: "
+          f"{'PASS' if ok else 'FAIL'}")
+    if not ok:
+        raise SystemExit("burn-driven day produced no burn-driven split")
+    return {"seed": seed, "ticks": ticks,
+            "burn_splits": len(burn_splits),
+            "first_burn_split": burn_splits[0].to_record(),
+            "closing_burn": monitor.burn("serving_p95"),
+            "groups_at_close": len(cluster.active())}
 
 
 # ------------------------------------------------------------------ #
@@ -204,6 +271,7 @@ def run(seed: int = 11, ticks: int = 400, flatness: float = 1.5,
     if smoke:
         ticks = min(ticks, 150)
     sim = sim_day(seed, ticks, flatness)
+    burn = burn_day(seed, ticks)
     import tempfile
 
     with tempfile.TemporaryDirectory(prefix="ditl-static-") as d:
@@ -213,7 +281,7 @@ def run(seed: int = 11, ticks: int = 400, flatness: float = 1.5,
 
         doc = obs_bench.emit(emit_bench, "autopilot",
                              extra={"bench": {"smoke": smoke, "sim": sim,
-                                              "real": real}})
+                                              "burn": burn, "real": real}})
         print(f"  wrote {emit_bench} ({doc['schema']}, kind=autopilot)")
 
 

@@ -185,13 +185,32 @@ def _time_op(fn, *, warmup: int = 1, reps: int = 3) -> float:
     return samples[len(samples) // 2]
 
 
+def _phase_attribution(kernel: str, host_arrays, compute_fn,
+                       reps: int = 3) -> None:
+    """DMA-vs-compute attribution: time host->device staging of the
+    kernel's inputs separately from compute on already-resident arrays,
+    into the ``kernel_phase_ms{kernel,phase}`` histograms — the split
+    that tells you whether a slow kernel is data-starved or MXU-bound."""
+    import jax
+
+    from repro import obs
+    for _ in range(reps):
+        with obs.phase_timer(kernel, "dma"):
+            dev = [jax.block_until_ready(jax.device_put(a))
+                   for a in host_arrays]
+        with obs.phase_timer(kernel, "compute"):
+            jax.block_until_ready(compute_fn(*dev))
+
+
 def kernel_bench(smoke: bool = False):
     """Time ``bm25_blockmax_topk`` and ``interval_join`` at a few sizes and
     report achieved GFLOP/s against the roofline bound (min of the compute
     and HBM ceilings for each kernel's FLOP/byte mix).  Results land in the
-    obs registry as ``kernel_achieved_gflops{kernel,size}`` and
-    ``kernel_roofline_frac{kernel,size}`` so ``--emit-bench`` can persist
-    them as the BENCH_kernels.json trajectory point."""
+    obs registry as ``kernel_achieved_gflops{kernel,size}``,
+    ``kernel_roofline_frac{kernel,size}`` and the per-phase
+    ``kernel_phase_ms{kernel,phase}`` (DMA staging vs resident compute)
+    so ``--emit-bench`` can persist them as the BENCH_kernels.json
+    trajectory point."""
     import jax.numpy as jnp
     import numpy as np
 
@@ -205,12 +224,16 @@ def kernel_bench(smoke: bool = False):
 
     bm25_sizes = [(8, 32, 64)] if smoke else [(8, 32, 64), (16, 128, 64)]
     for t, nb, bs in bm25_sizes:
-        impacts = jnp.asarray(
+        imp_np = np.asarray(
             rng.random((t, nb, bs), dtype=np.float32) *
-            (rng.random((t, nb, bs)) < 0.3))
-        bmax = impacts.max(axis=2)
+            (rng.random((t, nb, bs)) < 0.3), dtype=np.float32)
+        bmax_np = imp_np.max(axis=2)
+        impacts, bmax = jnp.asarray(imp_np), jnp.asarray(bmax_np)
         fn = lambda: bm25_blockmax_topk(impacts, bmax, k=10)  # noqa: E731
         secs = _time_op(fn)
+        _phase_attribution(
+            "bm25_blockmax", [imp_np, bmax_np],
+            lambda i, b: bm25_blockmax_topk(i, b, k=10))
         # per-doc score = sum over T term impacts -> ~T adds per (block, slot)
         flops = float(t * nb * bs)
         nbytes = 4.0 * (t * nb * bs + t * nb)        # impacts + block maxima
@@ -218,12 +241,17 @@ def kernel_bench(smoke: bool = False):
 
     join_sizes = [1024] if smoke else [1024, 4096]
     for n in join_sizes:
-        a_s = jnp.asarray(rng.integers(0, 1 << 20, n), dtype=jnp.int32)
-        a_e = a_s + jnp.asarray(rng.integers(1, 64, n), dtype=jnp.int32)
-        b_s = jnp.asarray(rng.integers(0, 1 << 20, n), dtype=jnp.int32)
-        b_e = b_s + jnp.asarray(rng.integers(64, 4096, n), dtype=jnp.int32)
+        a_s_np = rng.integers(0, 1 << 20, n).astype(np.int32)
+        a_e_np = a_s_np + rng.integers(1, 64, n).astype(np.int32)
+        b_s_np = rng.integers(0, 1 << 20, n).astype(np.int32)
+        b_e_np = b_s_np + rng.integers(64, 4096, n).astype(np.int32)
+        a_s, a_e = jnp.asarray(a_s_np), jnp.asarray(a_e_np)
+        b_s, b_e = jnp.asarray(b_s_np), jnp.asarray(b_e_np)
         fn = lambda: interval_join(a_s, a_e, b_s, b_e)  # noqa: E731
         secs = _time_op(fn)
+        _phase_attribution(
+            "interval_join", [a_s_np, a_e_np, b_s_np, b_e_np],
+            interval_join)
         flops = 3.0 * n * n                     # 2 compares + OR-combine/pair
         nbytes = 4.0 * (4 * n + n)              # four int32 inputs + mask out
         rows.append(("interval_join", f"{n}x{n}", secs, flops, nbytes))
@@ -242,6 +270,17 @@ def kernel_bench(smoke: bool = False):
                   kernel=kernel, size=size).set(frac)
         print(f"| {kernel} | {size} | {1e3 * secs:.2f} | {achieved:.3f} | "
               f"{frac:.2e} |")
+    print()
+    print("| kernel | phase | p50 ms | samples |")
+    print("|---|---|---|---|")
+    for kernel in dict.fromkeys(k for k, *_ in rows):
+        for ph in ("dma", "compute"):
+            h = reg.histogram("kernel_phase_ms",
+                              "per-phase kernel wall time",
+                              kernel=kernel, phase=ph)
+            if h.count:
+                print(f"| {kernel} | {ph} | {h.percentile(0.5):.3f} | "
+                      f"{h.count} |")
     return rows
 
 

@@ -52,6 +52,10 @@ def main():
                     help="dump any request trace slower than MS milliseconds "
                          "to traces_slow.jsonl next to --metrics-dump (or "
                          "the cwd)")
+    ap.add_argument("--admin-port", type=int, default=None,
+                    help="serve the obs admin endpoint (/metrics, /routing, "
+                         "/traces, /profile/cpu, ...) on this port for the "
+                         "duration of the run (0 = ephemeral)")
     args = ap.parse_args()
     if args.trace_slow is not None:
         import os
@@ -86,6 +90,14 @@ def main():
         warren = store.warren()
     else:
         warren = Warren(DynamicIndex())
+    admin = None
+    if args.admin_port is not None:
+        from repro import obs
+        admin = obs.AdminServer(
+            port=args.admin_port,
+            warren=warren if hasattr(warren, "describe_routing") else None,
+            slo=obs.SLOMonitor()).start()
+        print(f"admin endpoint: {admin.url()}")
     t0 = time.time()
     ingest_documents(warren, doc_generator(0, args.docs), batch=256)
     print(f"indexed {args.docs} docs in {time.time() - t0:.1f}s")
@@ -180,6 +192,8 @@ def main():
           f"(includes jit)")
     print(f"block-max kernel : {1e3 * t_kernel:7.2f} ms (interpret mode, "
           f"1 query)")
+    if admin is not None:
+        admin.close()
     if args.tiered:
         store.close()
     if args.shards > 1 or args.replicas > 1:

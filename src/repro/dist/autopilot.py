@@ -87,6 +87,9 @@ class GroupSignal:
     retired: bool = False
     replica_seqs: Tuple[int, ...] = ()
     alive: Tuple[bool, ...] = ()
+    # sustained SLO burn rate (min across monitor windows), stamped by an
+    # obs.SLOSignalSource wrapper; NaN when no SLO monitor is attached
+    burn_rate: float = math.nan
 
 
 class WarrenSignals:
@@ -186,15 +189,23 @@ class WarrenActuator:
 class HotSplitPolicy:
     """Split a group that is *sustainedly* hot: windowed p95 scatter
     latency at/above ``p95_hot_ms``, or doc count at/above ``skew_ratio``
-    times the mean of the other active groups, for ``sustain_ticks``
-    consecutive ticks.  Groups below ``min_docs`` never split (nothing to
-    partition) and the warren never grows past ``max_groups``."""
+    times the mean of the other active groups, or sustained SLO burn rate
+    at/above ``burn_hot``, for ``sustain_ticks`` consecutive ticks.
+    Groups below ``min_docs`` never split (nothing to partition) and the
+    warren never grows past ``max_groups``.
+
+    ``burn_hot`` defaults to +inf (disabled): burn only drives splits
+    when an :class:`repro.obs.SLOSignalSource` stamps
+    ``GroupSignal.burn_rate`` and the operator opts in — burn 1.0 means
+    the error budget is being consumed exactly at the sustainable rate,
+    so thresholds slightly above 1 page on real sustained burn."""
 
     p95_hot_ms: float = 50.0
     skew_ratio: float = 3.0
     min_docs: int = 8
     sustain_ticks: int = 3
     max_groups: int = 16
+    burn_hot: float = math.inf
 
 
 @dataclass(frozen=True)
@@ -333,6 +344,7 @@ class Controller:
         self.clock = clock
         self.pool = pool
         self.decision_log = decision_log
+        self._log_sink: Optional[obs.RotatingJsonl] = None
         self.decisions: List[Decision] = []
         self._tick = 0
         self._hot: Dict[int, int] = {}           # group -> hot streak
@@ -347,10 +359,17 @@ class Controller:
     def for_warren(warren, rebalancer: Optional[Rebalancer] = None,
                    config: Optional[AutopilotConfig] = None,
                    clock: Callable[[], float] = time.monotonic,
-                   decision_log: Optional[str] = None) -> "Controller":
+                   decision_log: Optional[str] = None,
+                   slo_monitor=None) -> "Controller":
         """The production wiring: live signals + live actuator + the
-        family's scatter pool (for PoolPolicy autoscaling)."""
-        return Controller(WarrenSignals(warren),
+        family's scatter pool (for PoolPolicy autoscaling).  Passing an
+        ``obs.SLOMonitor`` wraps the signal source in an
+        ``obs.SLOSignalSource`` so every GroupSignal carries its
+        sustained serving-SLO burn rate (see HotSplitPolicy.burn_hot)."""
+        signals = WarrenSignals(warren)
+        if slo_monitor is not None:
+            signals = obs.SLOSignalSource(signals, slo_monitor)
+        return Controller(signals,
                           WarrenActuator(warren, rebalancer),
                           config=config, clock=clock,
                           pool=warren.scatter_pool,
@@ -452,6 +471,10 @@ class Controller:
                 if others and s.docs >= split.skew_ratio * \
                         max(1.0, sum(others) / len(others)):
                     hot = True
+                # sustained SLO budget burn (NaN-safe: NaN != NaN)
+                if s.burn_rate == s.burn_rate and \
+                        s.burn_rate >= split.burn_hot:
+                    hot = True
             self._hot[s.group] = self._hot.get(s.group, 0) + 1 if hot else 0
             idle = s.reads <= cold.idle_reads
             self._idle[s.group] = (self._idle.get(s.group, 0) + 1
@@ -493,10 +516,13 @@ class Controller:
             hot = [s for s in active
                    if self._hot.get(s.group, 0) >= sp.sustain_ticks]
             for s in sorted(hot, key=lambda s: (-s.docs, s.group)):
+                why = f"p95 {s.p95_ms:.1f} ms, {s.docs} docs"
+                if s.burn_rate == s.burn_rate and \
+                        s.burn_rate >= sp.burn_hot:
+                    why += f", burn {s.burn_rate:.2f}"
                 out.append(Decision(
                     tick=tick, t=now, kind="split", group=s.group,
-                    reason=f"hot for {self._hot[s.group]} ticks "
-                           f"(p95 {s.p95_ms:.1f} ms, {s.docs} docs)"))
+                    reason=f"hot for {self._hot[s.group]} ticks ({why})"))
 
         cold = cfg.cold
         idle = sorted(((self._idle.get(s.group, 0), s) for s in active),
@@ -604,5 +630,7 @@ class Controller:
     def _append_log(self, d: Decision) -> None:
         if self.decision_log is None:
             return
-        with open(self.decision_log, "a") as fh:
-            fh.write(json.dumps(d.to_record(), sort_keys=True) + "\n")
+        if self._log_sink is None or \
+                self._log_sink.path != self.decision_log:
+            self._log_sink = obs.RotatingJsonl(self.decision_log)
+        self._log_sink.write(d.to_record())

@@ -247,7 +247,10 @@ class ReplicaGroup:
         self.group_id = group_id
         self.replicas = replicas
         self.alive = [True] * len(replicas)
-        self.write_lock = threading.RLock()
+        # contention-profiled (lock_wait_ms{lock="group_write"}): commits,
+        # swaps, and resurrections queueing here is the first thing to
+        # look at when write p95 moves
+        self.write_lock = obs.ProfiledLock("group_write", threading.RLock())
         self.epoch = 0
         self.retired = False                 # merged away: empty, addressable
         self.demoted: Optional[str] = None   # run-set directory when cold
@@ -609,7 +612,7 @@ class ShardedWarren:
                             if async_scatter else None),
                 "timings": ScatterTimings(),
                 "table": _table or RoutingTable.striped(len(self.groups)),
-                "rebalance_lock": threading.Lock(),
+                "rebalance_lock": obs.ProfiledLock("rebalance"),
             }
         self.index = _ShardedIndexView(self.groups, self.tokenizer,
                                        self.featurizer)
@@ -652,6 +655,31 @@ class ShardedWarren:
     def group_seqnums(self) -> List[List[int]]:
         """Per-group, per-replica committed seqnum high-water marks."""
         return [g.replica_seqnums() for g in self.groups]
+
+    def describe_routing(self) -> dict:
+        """JSON-able view of the CURRENT routing table and per-group
+        state — the admin server's ``/routing`` payload.  Reads only
+        lock-free fields plus the replicas' publish locks (for seqnums),
+        never a group write lock, so a scrape mid-rebalance cannot block
+        writers; the epoch pair makes a torn read visible instead."""
+        table = self._ctx["table"]
+        groups = {}
+        for g, grp in enumerate(self.groups):
+            groups[str(g)] = {
+                "epoch": grp.epoch,
+                "table_epoch": table.group_epochs[g]
+                if g < len(table.group_epochs) else None,
+                "retired": grp.retired,
+                "demoted": grp.demoted,
+                "alive": list(grp.alive),
+                "n_replicas": grp.n_replicas,
+                "replica_seqnums": grp.replica_seqnums(),
+                "ranges": [[lo, hi] for lo, hi in table.ranges_of(g)],
+            }
+        return {"epoch": table.epoch,
+                "write_groups": list(table.write_groups),
+                "n_groups": len(self.groups),
+                "groups": groups}
 
     # -- cold demotion ----------------------------------------------------- #
     def _group_static_dir(self, group: int,
@@ -966,6 +994,12 @@ class ShardedWarren:
                 gt = self._txn_open[g]
                 ok = gt.quorum_ready(hook=hook)
                 if ok < gt.group.quorum:
+                    reg = obs.registry()
+                    if reg.enabled:
+                        reg.counter(
+                            "txn_quorum_abort_total",
+                            "cross-shard transactions aborted because a "
+                            "touched group could not ready a quorum").inc()
                     raise QuorumError(
                         f"shard group {g}: {ok}/{gt.group.n_replicas} "
                         f"replicas ready, quorum is {gt.group.quorum}")
@@ -1058,6 +1092,11 @@ class ShardedWarren:
             raise RuntimeError(
                 "partial cross-shard commit: some groups published, the "
                 "rest are recoverable from their ready records") from failed
+        if reg.enabled:
+            # the success half of the quorum-commit SLO ratio
+            # (bad = txn_quorum_abort_total, incremented at phase 1)
+            reg.counter("txn_quorum_commit_total",
+                        "cross-shard transactions fully published").inc()
         return append_remap if append_remap is not None else (lambda a: a)
 
     def abort(self) -> None:

@@ -39,6 +39,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro import obs
 from repro.dist.autopilot import GroupSignal
 from repro.dist.rebalance import RebalanceAborted
 
@@ -96,10 +97,16 @@ class SimCluster:
     """
 
     def __init__(self, replicas: int = 2, docs: int = 0,
-                 base_ms: float = 2.0, ms_per_doc: float = 0.05):
+                 base_ms: float = 2.0, ms_per_doc: float = 0.05,
+                 observe_latency: bool = False):
         self.replicas = replicas
         self.base_ms = base_ms
         self.ms_per_doc = ms_per_doc
+        # observe_latency feeds each routed read's modeled latency into
+        # the real scatter_latency_ms{group} histograms, so an
+        # obs.SLOMonitor can compute burn rates over simulated traffic
+        self.observe_latency = observe_latency
+        self._lat_hists: Dict[int, obs.Histogram] = {}
         self.groups: List[SimGroup] = [SimGroup(
             gid=0, lo=0.0, hi=1.0, docs=docs,
             seqs=[0] * replicas, alive=[True] * replicas)]
@@ -130,9 +137,19 @@ class SimCluster:
 
     # -- traffic --------------------------------------------------------- #
     def route(self, keys: Sequence[float]) -> None:
+        observe = self.observe_latency and obs.registry().enabled
         for k in keys:
             g = self.owner(k)
             self._reads[g.gid] = self._reads.get(g.gid, 0) + 1
+            if observe:
+                h = self._lat_hists.get(g.gid)
+                if h is None:
+                    h = obs.registry().histogram(
+                        "scatter_latency_ms",
+                        "per-group scatter fan-out latency",
+                        group=g.gid)
+                    self._lat_hists[g.gid] = h
+                h.observe(self.base_ms + self.ms_per_doc * g.docs)
 
     def ingest(self, keys: Sequence[float]) -> None:
         for k in keys:

@@ -13,6 +13,12 @@ Three layers:
 * bench: schema-versioned ``BENCH_*.json`` emission + validation — the
   persisted perf trajectory (see :mod:`repro.obs.bench`).
 
+Plus the live introspection plane on top: continuous profiling and lock
+contention (:mod:`repro.obs.profile`), declared SLOs with multi-window
+burn rates (:mod:`repro.obs.slo`), size-capped JSONL rotation
+(:mod:`repro.obs.rotate`), and the HTTP admin server exposing all of it
+(:mod:`repro.obs.server`).
+
 Disable everything (both planes drop to ~100 ns no-ops) with
 :func:`disable`; re-enable with :func:`enable`.
 """
@@ -23,6 +29,10 @@ from .trace import Span, Tracer, span, tracer
 from .bench import SCHEMA as BENCH_SCHEMA
 from .bench import emit as emit_bench
 from .bench import validate as validate_bench
+from .rotate import RotatingJsonl
+from .profile import ProfiledLock, SamplingProfiler, phase_timer, profile_for
+from .slo import SLO, SLOMonitor, SLOSignalSource, default_slos
+from .server import AdminServer
 
 
 def enable() -> None:
@@ -42,5 +52,9 @@ __all__ = [
     "JsonlSink", "MetricsRegistry", "registry", "sanitize",
     "Span", "Tracer", "span", "tracer",
     "BENCH_SCHEMA", "emit_bench", "validate_bench",
+    "RotatingJsonl",
+    "ProfiledLock", "SamplingProfiler", "phase_timer", "profile_for",
+    "SLO", "SLOMonitor", "SLOSignalSource", "default_slos",
+    "AdminServer",
     "enable", "disable",
 ]

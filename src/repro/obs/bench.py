@@ -30,8 +30,9 @@ REQUIRED: Dict[str, Tuple[str, ...]] = {
     "serving": ("serve_scatter_latency_ms", "serve_score_latency_ms",
                 "serve_merge_latency_ms"),
     "build": ("build_docs_per_s",),
-    "kernels": ("kernel_achieved_gflops",),
-    "autopilot": ("autopilot_actions_total", "autopilot_tick_ms"),
+    "kernels": ("kernel_achieved_gflops", "kernel_phase_ms"),
+    "autopilot": ("autopilot_actions_total", "autopilot_tick_ms",
+                  "slo_burn_rate"),
 }
 _HIST_KEYS = ("count", "p50", "p95", "p99")
 

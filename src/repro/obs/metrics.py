@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import math
 import threading
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 class _Enabled:
@@ -175,6 +175,32 @@ class Histogram:
         with self._lock:
             return self._percentile_locked(p)
 
+    def _bucket_le(self, i: int) -> float:
+        """Inclusive upper bound of bucket i (+inf for the overflow)."""
+        if i <= 0:
+            return self._lo
+        if i > self._n:
+            return math.inf
+        return 10 ** (self._log_lo + i / self._per_decade)
+
+    def cumulative_buckets(self) -> List[Tuple[str, int]]:
+        """Sparse cumulative ``(le, count)`` pairs in Prometheus histogram
+        form: ascending upper bounds as strings, count cumulative from the
+        underflow bucket up, terminated by ``("+Inf", total)`` (which by
+        construction equals ``_count``).  Only buckets that hold samples
+        are listed — the exposition stays small however wide the range."""
+        with self._lock:
+            counts = list(self._counts)
+            total = self._count
+        out: List[Tuple[str, int]] = []
+        cum = 0
+        for i, c in enumerate(counts):
+            cum += c
+            if c and i <= self._n:
+                out.append((format(self._bucket_le(i), ".6g"), cum))
+        out.append(("+Inf", total))
+        return out
+
     # -- windowed reads (delta between two bucket snapshots) ------------- #
     def bucket_counts(self) -> List[int]:
         """Point-in-time copy of the raw bucket counts.  Pair with
@@ -207,6 +233,30 @@ class Histogram:
             if seen >= target and c > 0:
                 return self._bucket_mid(i)
         return self._bucket_mid(len(delta) - 1)
+
+    def over_threshold_since(self, prev_counts: Optional[Sequence[int]],
+                             threshold: float) -> Tuple[int, int]:
+        """``(bad, total)`` observation counts since ``prev_counts`` was
+        captured with :meth:`bucket_counts` (``None`` = since the
+        beginning), where *bad* counts the observations above
+        ``threshold`` — the windowed error fraction SLO burn rates are
+        built from.  Exact to bucket resolution: a bucket counts as bad
+        iff its geometric midpoint exceeds the threshold."""
+        with self._lock:
+            cur = list(self._counts)
+        if prev_counts is None:
+            prev_counts = [0] * len(cur)
+        if len(prev_counts) != len(cur):
+            raise ValueError("bucket snapshot from a different histogram")
+        bad = total = 0
+        for i, (c, q) in enumerate(zip(cur, prev_counts)):
+            d = c - q
+            if d <= 0:
+                continue
+            total += d
+            if self._bucket_mid(i) > threshold:
+                bad += d
+        return bad, total
 
     def _percentile_locked(self, p: float) -> float:
         if self._count == 0:

@@ -13,8 +13,9 @@ Exporters:
 * ``JsonlSink`` appends one ``{"ts": ..., "metrics": snapshot}`` line per
   ``write()`` — the persisted perf-trajectory form consumed by
   ``BENCH_*.json`` emission and ``--metrics-dump``.
-* ``to_prometheus()`` renders the text exposition format (histograms as
-  summaries with quantile labels), for scraping or eyeballing.
+* ``to_prometheus()`` renders the text exposition format 0.0.4
+  (histograms as cumulative ``_bucket{le=...}`` series plus
+  ``_sum``/``_count``), for scraping or eyeballing.
 
 ``enabled`` gates every child metric's mutators (see
 :mod:`repro.obs.metrics`): disabling the registry turns the whole
@@ -113,16 +114,35 @@ class MetricsRegistry:
                          "series": series}
         return out
 
+    def series(self, name: str) -> List[Tuple[Dict[str, str], object]]:
+        """Live ``(labels, metric)`` pairs of one family (empty when the
+        family does not exist) — the read surface for consumers that need
+        the metric *objects* (windowed reads, SLO burn computation), not
+        a frozen snapshot."""
+        with self._lock:
+            fam = self._families.get(name)
+            if fam is None:
+                return []
+            return [(dict(k), m) for k, m in sorted(fam.children.items())]
+
     def to_prometheus(self) -> str:
-        """Text exposition: counters/gauges verbatim, histograms as
-        summaries (quantile-labeled series + ``_sum`` and ``_count``)."""
+        """Prometheus text exposition (format 0.0.4).  Counters and gauges
+        render verbatim; histograms follow the histogram type rules:
+        cumulative ``_bucket{le="..."}`` series in ascending bound order
+        with a terminal ``le="+Inf"`` equal to ``_count``, plus ``_sum``
+        and ``_count``.  Label values are escaped per the spec."""
+        def esc(v: str) -> str:
+            return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+                    .replace("\n", "\\n"))
+
         def fmt_labels(labels: dict, extra: Optional[dict] = None) -> str:
             items = dict(labels)
             if extra:
                 items.update(extra)
             if not items:
                 return ""
-            body = ",".join(f'{k}="{v}"' for k, v in sorted(items.items()))
+            body = ",".join(f'{k}="{esc(v)}"'
+                            for k, v in sorted(items.items()))
             return "{" + body + "}"
 
         def num(v) -> str:
@@ -130,28 +150,28 @@ class MetricsRegistry:
                 return "NaN"
             return repr(float(v)) if isinstance(v, float) else str(v)
 
+        with self._lock:
+            fams = [(name, fam.kind, fam.help, sorted(fam.children.items()))
+                    for name, fam in sorted(self._families.items())]
         lines = []
-        snap = self.snapshot()
-        for name, fam in snap.items():
-            if fam["help"]:
-                lines.append(f"# HELP {name} {fam['help']}")
-            ptype = ("summary" if fam["type"] == "histogram"
-                     else fam["type"])
-            lines.append(f"# TYPE {name} {ptype}")
-            for s in fam["series"]:
-                labels = s["labels"]
-                if fam["type"] == "histogram":
-                    for p in Histogram.PERCENTILES:
-                        q = s[f"p{int(p * 100)}"]
-                        lines.append(f"{name}{fmt_labels(labels, {'quantile': p})} "
-                                     f"{num(q)}")
+        for name, kind, help, children in fams:
+            if help:
+                lines.append(f"# HELP {name} {esc(help)}")
+            lines.append(f"# TYPE {name} {kind}")
+            for key, m in children:
+                labels = dict(key)
+                if kind == "histogram":
+                    for le, cum in m.cumulative_buckets():
+                        lines.append(
+                            f"{name}_bucket{fmt_labels(labels, {'le': le})} "
+                            f"{cum}")
                     lines.append(f"{name}_sum{fmt_labels(labels)} "
-                                 f"{num(s['sum'])}")
+                                 f"{num(m.sum)}")
                     lines.append(f"{name}_count{fmt_labels(labels)} "
-                                 f"{s['count']}")
+                                 f"{m.count}")
                 else:
                     lines.append(f"{name}{fmt_labels(labels)} "
-                                 f"{num(s['value'])}")
+                                 f"{num(m.value)}")
         return "\n".join(lines) + "\n"
 
 

@@ -36,6 +36,8 @@ import time
 from collections import deque
 from typing import Dict, List, Optional
 
+from .rotate import RotatingJsonl
+
 _CURRENT: "contextvars.ContextVar[Optional[Span]]" = contextvars.ContextVar(
     "repro_obs_span", default=None)
 
@@ -164,6 +166,11 @@ class _SpanCtx:
         span = self._span
         span.duration_s = time.perf_counter() - span._t0
         span.error = exc_type is not None
+        if exc_type is not None:
+            # label the span with the exception type so errored spans are
+            # greppable in dumps and visible in /traces; the exception
+            # still propagates (we never swallow it)
+            span.labels.setdefault("error", exc_type.__name__)
         _CURRENT.reset(self._token)
         if span.parent_id is None:           # root closed: trace complete
             self._tracer._finish(span._trace)
@@ -178,7 +185,7 @@ class Tracer:
         self._lock = threading.Lock()
         self._ring: "deque[_Trace]" = deque(maxlen=capacity)
         self._slow_ms: Optional[float] = None
-        self._slow_path: Optional[str] = None
+        self._slow_sink: Optional[RotatingJsonl] = None
         self.n_slow_dumped = 0
 
     # -- span creation ----------------------------------------------------- #
@@ -196,15 +203,17 @@ class Tracer:
     def _finish(self, trace: _Trace) -> None:
         with self._lock:
             self._ring.append(trace)
-            slow_ms, slow_path = self._slow_ms, self._slow_path
+            slow_ms, sink = self._slow_ms, self._slow_sink
+        # errored traces are always dump-eligible: a request that died is
+        # at least as interesting as one that was merely slow
+        errored = trace.root is not None and trace.root.error
         if (slow_ms is not None
-                and (trace.duration_ms or 0.0) >= slow_ms):
+                and ((trace.duration_ms or 0.0) >= slow_ms or errored)):
             rec = json.dumps(trace.to_record(), sort_keys=True)
             with self._lock:
                 self.n_slow_dumped += 1
-                if slow_path is not None:
-                    with open(slow_path, "a") as fh:
-                        fh.write(rec + "\n")
+            if sink is not None:
+                sink.write_line(rec)
 
     def traces(self) -> List[_Trace]:
         """Completed traces, oldest first (up to ring capacity)."""
@@ -220,6 +229,15 @@ class Tracer:
                 return t
         return None
 
+    def trace_by_id(self, trace_id: int) -> Optional[_Trace]:
+        """Completed trace with the given id, if still in the ring."""
+        with self._lock:
+            ring = list(self._ring)
+        for t in reversed(ring):
+            if t.trace_id == trace_id:
+                return t
+        return None
+
     def reset(self) -> None:
         with self._lock:
             self._ring.clear()
@@ -227,13 +245,19 @@ class Tracer:
 
     # -- slow-trace dump ---------------------------------------------------- #
     def set_slow_dump(self, threshold_ms: Optional[float],
-                      path: Optional[str] = None) -> None:
-        """Dump every trace slower than ``threshold_ms`` as one JSON line
-        appended to ``path`` (None threshold disables; None path counts
-        slow traces without writing)."""
+                      path: Optional[str] = None,
+                      max_bytes: int = 4 << 20, backups: int = 2) -> None:
+        """Dump every trace slower than ``threshold_ms`` — and every
+        errored trace, regardless of duration — as one JSON line appended
+        to ``path`` (None threshold disables; None path counts slow
+        traces without writing).  The dump is size-capped: it rotates at
+        ``max_bytes`` keeping ``backups`` old files, so a server that
+        runs for days cannot fill the disk with its own telemetry."""
         with self._lock:
             self._slow_ms = threshold_ms
-            self._slow_path = path
+            self._slow_sink = (RotatingJsonl(path, max_bytes=max_bytes,
+                                             backups=backups)
+                               if path is not None else None)
 
 
 # -- process-global tracer -------------------------------------------------- #

@@ -185,7 +185,10 @@ class TieredStore:
             hot._next_seq = max(hot._next_seq, m.next_seq)
         self.hot = hot
         self._view_lock = threading.Lock()
-        self._maint_lock = threading.RLock()
+        # contention-profiled (lock_wait_ms{lock="tiered_maint"}): freeze
+        # vs compact vs demote racing is exactly what /metrics should show
+        self._maint_lock = obs.ProfiledLock("tiered_maint",
+                                            threading.RLock())
         self.metrics = CompactionMetrics()
 
     # -- views ------------------------------------------------------------ #
@@ -203,6 +206,25 @@ class TieredStore:
 
     def warren(self) -> "TieredWarren":
         return TieredWarren(self)
+
+    def runs_info(self) -> dict:
+        """The static tier as the admin server's ``/tiered/runs`` serves
+        it: manifest position plus one record per live run."""
+        with self._view_lock:
+            m, runs = self._manifest, self._runs
+        return {
+            "manifest": {"version": m.version,
+                         "frozen_upto": m.frozen_upto},
+            "n_runs": len(runs),
+            "runs": [{
+                "run_id": r.info.run_id, "name": r.info.name,
+                "directory": r.directory,
+                "seq_lo": r.info.seq_lo, "seq_hi": r.info.seq_hi,
+                "addr_lo": r.info.addr_lo, "addr_hi": r.info.addr_hi,
+                "n_records": r.info.n_records,
+                "n_features": r.info.n_features,
+            } for r in runs],
+        }
 
     # -- freeze: hot tier -> new run -------------------------------------- #
     def freeze(self) -> Optional[RunInfo]:

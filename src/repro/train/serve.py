@@ -77,7 +77,9 @@ class MicroBatcher:
         self.cfg = cfg
         self._q: "queue.Queue" = queue.Queue()
         self._stop = threading.Event()
-        self._close_lock = threading.Lock()   # orders submit vs close-drain
+        # orders submit vs close-drain; contention-profiled
+        # (lock_wait_ms{lock="microbatcher"})
+        self._close_lock = obs.ProfiledLock("microbatcher")
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
@@ -287,17 +289,20 @@ class RetrievalServer:
         nb = self._acc_pad(stats.n_docs)
         self._note_shapes(qp, tp, l, nb)
         with obs.span("device_score"):
-            doc_idx = np.full((qp, tp, l), nb, np.int32)
-            impacts = np.zeros((qp, tp, l), np.float32)
-            qmask = np.zeros((qp, tp), np.float32)
-            for qi, ti, di, imp in entries:
-                doc_idx[qi, ti, :len(di)] = di
-                impacts[qi, ti, :len(di)] = imp
-                qmask[qi, ti] = 1.0
-            scores, ids = bm25_topk(jnp.asarray(doc_idx),
-                                    jnp.asarray(impacts), jnp.asarray(qmask),
-                                    n_docs=nb, k=self.k)
-            scores, ids = np.asarray(scores), np.asarray(ids)
+            with obs.phase_timer("bm25_topk", "gather"):
+                doc_idx = np.full((qp, tp, l), nb, np.int32)
+                impacts = np.zeros((qp, tp, l), np.float32)
+                qmask = np.zeros((qp, tp), np.float32)
+                for qi, ti, di, imp in entries:
+                    doc_idx[qi, ti, :len(di)] = di
+                    impacts[qi, ti, :len(di)] = imp
+                    qmask[qi, ti] = 1.0
+            with obs.phase_timer("bm25_topk", "compute"):
+                scores, ids = bm25_topk(jnp.asarray(doc_idx),
+                                        jnp.asarray(impacts),
+                                        jnp.asarray(qmask),
+                                        n_docs=nb, k=self.k)
+                scores, ids = np.asarray(scores), np.asarray(ids)
         t_score = time.perf_counter() - t0
         t0 = time.perf_counter()
         with obs.span("merge"):
@@ -408,7 +413,8 @@ class RetrievalServer:
         with obs.span("device_score"):
             pending = []
             for g in range(n_groups):
-                blk = pack_group(g)
+                with obs.phase_timer("bm25_topk", "gather"):
+                    blk = pack_group(g)
                 if blk is None:
                     pending.append(None)
                     continue
@@ -416,9 +422,10 @@ class RetrievalServer:
                 pending.append(bm25_topk(
                     jnp.asarray(doc_idx), jnp.asarray(impacts),
                     jnp.asarray(qmask), n_docs=nb, k=k))
-            group_res = [None if p is None
-                         else (np.asarray(p[0]), np.asarray(p[1]))
-                         for p in pending]
+            with obs.phase_timer("bm25_topk", "compute"):
+                group_res = [None if p is None
+                             else (np.asarray(p[0]), np.asarray(p[1]))
+                             for p in pending]
         t_score = time.perf_counter() - t0
         # gather: global k-way merge; per-group lists come out of top_k
         # sorted by (-score, doc index) = (-score, address) within a group,

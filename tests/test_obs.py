@@ -142,7 +142,8 @@ def test_prometheus_and_jsonl_exports(tmp_path):
     reg.gauge("depth").set(float("nan"))     # must not break JSON export
     text = reg.to_prometheus()
     assert 'reads_total{group="0"} 3' in text
-    assert 'lat_ms{quantile="0.95",site="s"}' in text
+    assert 'lat_ms_bucket{le="+Inf",site="s"} 1' in text
+    assert 'lat_ms_sum{site="s"} 2.5' in text
     assert 'lat_ms_count{site="s"} 1' in text
     p = tmp_path / "m.jsonl"
     rec = JsonlSink(str(p)).write(reg)
@@ -370,3 +371,99 @@ def test_obs_disable_silences_instrumentation(tmp_path):
         w.commit()
     assert obs.registry().histogram("txn_commit_latency_ms").count == before
     assert obs.tracer().span("x") is obs.tracer().span("y")
+
+
+# --------------------------------------------------------------------- #
+# Prometheus exposition conformance (format 0.0.4)                      #
+# --------------------------------------------------------------------- #
+
+def _parse_prometheus(text):
+    """Minimal 0.0.4 parser: {(name, frozenset(labels)): value}."""
+    out = {}
+    for line in text.strip().split("\n"):
+        if line.startswith("#"):
+            continue
+        metric, value = line.rsplit(" ", 1)
+        if "{" in metric:
+            name, rest = metric.split("{", 1)
+            body = rest[:-1]
+            labels = {}
+            for part in body.split('",'):
+                k, v = part.split("=", 1)
+                labels[k] = v.strip('"')
+            key = (name, frozenset(labels.items()))
+        else:
+            key = (metric, frozenset())
+        out[key] = float(value) if value != "NaN" else math.nan
+    return out
+
+
+def test_prometheus_histogram_conformance():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_ms", "latency", site="a")
+    for v in (0.5, 2.0, 2.0, 40.0, 1e9):     # includes an overflow sample
+        h.observe(v)
+    reg.histogram("lat_ms", "latency", site="b").observe(1.0)
+    text = reg.to_prometheus()
+    assert "# TYPE lat_ms histogram" in text
+
+    # per-series: ascending le, non-decreasing cumulative counts,
+    # terminal +Inf bucket equal to _count
+    for site, count in (("a", 5), ("b", 1)):
+        bounds, cums = [], []
+        for line in text.split("\n"):
+            if line.startswith("lat_ms_bucket") and f'site="{site}"' in line:
+                metric, value = line.rsplit(" ", 1)
+                le = metric.split('le="')[1].split('"')[0]
+                bounds.append(math.inf if le == "+Inf" else float(le))
+                cums.append(int(value))
+        assert bounds == sorted(bounds)
+        assert cums == sorted(cums)
+        assert bounds[-1] == math.inf
+        assert cums[-1] == count
+        parsed = _parse_prometheus(text)
+        assert parsed[("lat_ms_count",
+                       frozenset({("site", site)}))] == count
+    a_sum = _parse_prometheus(text)[("lat_ms_sum",
+                                     frozenset({("site", "a")}))]
+    assert a_sum == pytest.approx(0.5 + 2.0 + 2.0 + 40.0 + 1e9)
+
+
+def test_prometheus_label_escaping():
+    reg = MetricsRegistry()
+    reg.counter("odd_total", "odd", path='a"b\\c\nd').inc()
+    text = reg.to_prometheus()
+    assert 'path="a\\"b\\\\c\\nd"' in text
+
+
+# --------------------------------------------------------------------- #
+# tracer hygiene: exception exits                                       #
+# --------------------------------------------------------------------- #
+
+def test_span_exception_sets_error_label_and_dumps(tmp_path):
+    tr = Tracer()
+    p = tmp_path / "slow.jsonl"
+    tr.set_slow_dump(1e9, str(p))       # nothing is slow ...
+    with pytest.raises(KeyError):
+        with tr.span("req"):
+            with tr.span("inner"):
+                raise KeyError("boom")
+    t = tr.last_trace("req")
+    spans = {s.name: s for s in t.spans}
+    assert spans["inner"].error and spans["req"].error
+    assert spans["inner"].labels["error"] == "KeyError"
+    assert t.duration_ms is not None    # trace still finished
+    # ... but an errored trace is always dump-eligible
+    assert tr.n_slow_dumped == 1
+    rec = json.loads(p.read_text())
+    assert rec["root"] == "req"
+
+
+def test_span_error_label_does_not_clobber_user_label():
+    tr = Tracer()
+    with pytest.raises(ValueError):
+        with tr.span("req", error="custom"):
+            raise ValueError("x")
+    s = tr.last_trace("req").root
+    assert s.error is True
+    assert s.labels["error"] == "custom"     # setdefault semantics
