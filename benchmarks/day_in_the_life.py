@@ -266,8 +266,37 @@ def real_warren_pass(smoke: bool, static_dir: str) -> dict:
             "decisions": [d.to_record() for d in ctl.decisions]}
 
 
+def witness_pass(smoke: bool, baseline_wall: float) -> dict:
+    """Re-run the real-warren pass with the LockWitness installed:
+    proves the whole day's acquisition orders against
+    analysis/lock_hierarchy.toml and reports the witness overhead vs the
+    un-witnessed pass that just ran."""
+    import os
+    import tempfile
+
+    from repro import obs
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    hierarchy = os.path.join(root, "analysis", "lock_hierarchy.toml")
+    w = obs.install_witness(obs.LockWitness.from_hierarchy(hierarchy))
+    try:
+        with tempfile.TemporaryDirectory(prefix="ditl-witness-") as d:
+            real = real_warren_pass(smoke, d)
+        w.check()          # any observed inversion fails the bench
+        edges = w.edges()
+    finally:
+        obs.uninstall_witness()
+    overhead = ((real["wall_s"] - baseline_wall) / baseline_wall * 100
+                if baseline_wall else 0.0)
+    print(f"# lock witness: {len(edges)} acquisition edges observed, "
+          f"0 violations, overhead {overhead:+.1f}% vs un-witnessed pass")
+    return {"edges": len(edges), "violations": 0,
+            "wall_s": real["wall_s"], "overhead_pct": overhead}
+
+
 def run(seed: int = 11, ticks: int = 400, flatness: float = 1.5,
-        smoke: bool = False, emit_bench: str = None):
+        smoke: bool = False, emit_bench: str = None,
+        lock_witness: bool = False):
     if smoke:
         ticks = min(ticks, 150)
     sim = sim_day(seed, ticks, flatness)
@@ -276,6 +305,8 @@ def run(seed: int = 11, ticks: int = 400, flatness: float = 1.5,
 
     with tempfile.TemporaryDirectory(prefix="ditl-static-") as d:
         real = real_warren_pass(smoke, d)
+    if lock_witness:
+        real["witness"] = witness_pass(smoke, real["wall_s"])
     if emit_bench:
         from repro.obs import bench as obs_bench
 
@@ -301,6 +332,12 @@ if __name__ == "__main__":
     ap.add_argument("--emit-bench", metavar="PATH", default=None,
                     help="write a schema-versioned BENCH_autopilot.json "
                          "from the obs registry snapshot (repro.obs.bench)")
+    ap.add_argument("--lock-witness", action="store_true",
+                    help="re-run the real-warren pass with the runtime "
+                         "LockWitness installed (analysis/lock_hierarchy"
+                         ".toml); fails on any observed lock-order "
+                         "violation and reports the witness overhead")
     args = ap.parse_args()
     run(seed=args.seed, ticks=args.ticks, flatness=args.flatness,
-        smoke=args.smoke, emit_bench=args.emit_bench)
+        smoke=args.smoke, emit_bench=args.emit_bench,
+        lock_witness=args.lock_witness)

@@ -1,0 +1,33 @@
+"""repro.analysis — concurrency contract checker for the warren.
+
+Static companion to the runtime :class:`repro.obs.LockWitness`:
+
+* lockdep-style lock-order analysis over the interprocedural
+  acquisition graph (cycles, declared-hierarchy violations,
+  self-deadlocks, unordered ascending multi-acquires)
+* blocking-call-under-hot-lock detection (fsync/file I/O/pool fan-out
+  while a request-path lock is held)
+* contract lints tying code to ``docs/architecture.md`` (metric names
+  and label sets, hot-path ``registry().enabled`` guards, span names)
+
+Run as ``python -m repro.analysis src/``.  Exit is nonzero iff any
+finding is not suppressed (with justification) in
+``analysis/suppressions.toml``.
+"""
+
+from .blocking import DEFAULT_BLOCKING, analyze_blocking, blocking_set
+from .callgraph import CallGraph
+from .config import Catalog, Hierarchy, LockLevel
+from .contracts import analyze_contracts
+from .driver import AnalysisReport, main, run_analysis
+from .findings import Finding, Suppressions, SuppressionError
+from .lockmap import LockDef, LockMap, build_lockmap
+from .lockorder import LockOrderResult, analyze_lock_order
+
+__all__ = [
+    "AnalysisReport", "CallGraph", "Catalog", "DEFAULT_BLOCKING",
+    "Finding", "Hierarchy", "LockDef", "LockLevel", "LockMap",
+    "LockOrderResult", "Suppressions", "SuppressionError",
+    "analyze_blocking", "analyze_contracts", "analyze_lock_order",
+    "blocking_set", "build_lockmap", "main", "run_analysis",
+]

@@ -1,0 +1,111 @@
+"""Blocking-call-under-hot-lock detection.
+
+A *blocking call* is anything that can stall a thread for an unbounded
+or I/O-bound time: ``os.fsync``, file opens/renames, subprocess spawns,
+``time.sleep``, socket connects, pool fan-outs.  Holding a **hot** lock
+(per ``analysis/lock_hierarchy.toml``) across one serializes the warren
+write path behind disk or network latency.
+
+The detector combines the per-function event streams from
+:mod:`lockorder` (which already tag blocking sites with the held-set at
+that point) with a transitive may-block summary ``B(f)``: a call into
+``commit`` while ``group_write`` is held inherits commit's WAL fsync.
+
+Findings dedup to one per ``(hot lock, blocking call, function holding
+the lock)`` so the suppression file stays reviewable; each carries the
+call chain as provenance.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Set, Tuple
+
+from .callgraph import CallGraph
+from .config import Hierarchy
+from .findings import Finding
+from .lockorder import BlockEvent, CallEvent
+
+# Default dotted names treated as blocking.  Matched on the full dotted
+# path *or* its final component, so both ``os.fsync`` and a bare
+# ``fsync`` import hit.  Extended by ``[blocking].calls`` in the
+# hierarchy file.
+DEFAULT_BLOCKING: Set[str] = {
+    "os.fsync", "fsync", "os.fdatasync",
+    "time.sleep", "sleep",
+    "open", "os.open",
+    "os.replace", "os.rename", "os.remove", "os.unlink",
+    "shutil.copytree", "shutil.rmtree", "shutil.move", "shutil.copyfile",
+    "subprocess.run", "subprocess.Popen", "subprocess.check_output",
+    "socket.create_connection",
+    "urlopen", "requests.get", "requests.post",
+}
+
+
+def blocking_set(hierarchy: Hierarchy) -> Set[str]:
+    return DEFAULT_BLOCKING | set(hierarchy.blocking_calls)
+
+
+# B(f): blocking call name -> (line of first local site/call, chain)
+_Summary = Dict[str, Tuple[int, Tuple[str, ...]]]
+
+
+def _summaries(graph: CallGraph,
+               events: Dict[str, List[object]]) -> Dict[str, _Summary]:
+    B: Dict[str, _Summary] = {q: {} for q in graph.functions}
+    for qual, evs in events.items():
+        for ev in evs:
+            if isinstance(ev, BlockEvent):
+                B[qual].setdefault(ev.call, (ev.line, ()))
+    changed = True
+    while changed:
+        changed = False
+        for qual, evs in events.items():
+            for ev in evs:
+                if not isinstance(ev, CallEvent):
+                    continue
+                for call, (_, chain) in B.get(ev.target, {}).items():
+                    if call not in B[qual] and len(chain) < 6:
+                        tgt = ev.target.split("::")[-1]
+                        B[qual][call] = (ev.line, (tgt,) + chain)
+                        changed = True
+    return B
+
+
+def analyze_blocking(graph: CallGraph, events: Dict[str, List[object]],
+                     hierarchy: Hierarchy) -> List[Finding]:
+    B = _summaries(graph, events)
+    findings: List[Finding] = []
+    seen: Set[Tuple[str, str, str]] = set()
+
+    def emit(lock: str, call: str, qual: str, line: int,
+             chain: Tuple[str, ...]) -> None:
+        fi = graph.functions[qual]
+        fn = qual.split("::")[-1]
+        key = (lock, call, fn)
+        if key in seen:
+            return
+        seen.add(key)
+        via = " via " + " → ".join(chain) if chain else ""
+        findings.append(Finding(
+            kind="blocking-under-lock",
+            id=f"blocking-under-lock:{lock}:{fn}:{call}",
+            message=(f"blocking call {call!r} reachable while hot lock "
+                     f"{lock!r} is held in {fn} "
+                     f"({fi.module}:{line}){via}"),
+            module=fi.module, line=line))
+
+    for qual, evs in events.items():
+        for ev in evs:
+            if isinstance(ev, BlockEvent):
+                for lock in ev.held:
+                    if hierarchy.is_hot(lock):
+                        emit(lock, ev.call, qual, ev.line, ())
+            elif isinstance(ev, CallEvent) and ev.held:
+                hot = [h for h in ev.held if hierarchy.is_hot(h)]
+                if not hot:
+                    continue
+                for call, (_, chain) in B.get(ev.target, {}).items():
+                    tgt = ev.target.split("::")[-1]
+                    for lock in hot:
+                        emit(lock, call, qual, ev.line, (tgt,) + chain)
+    return findings

@@ -1,0 +1,215 @@
+"""Function index + call resolution for the interprocedural passes.
+
+Resolution is deliberately cheap and honest: a call edge is added only
+when the target is *unambiguous* —
+
+1. ``self.m(...)``        → method ``m`` of the enclosing class
+2. ``f(...)``             → function ``f`` of the same module, else the
+                            unique function of that name anywhere
+3. ``self.attr.m(...)``   → method ``m`` of the type constructed into
+                            ``self.attr`` (constructor-assignment type
+                            inference from :mod:`lockmap`)
+4. ``<var>.m(...)``       → method ``m`` of the type a local
+                            ``var = SomeClass(...)`` assignment gives
+5. ``<anything>.m(...)``  → the unique method named ``m`` in the whole
+                            analyzed tree, unless ``m`` collides with a
+                            common builtin-container method name
+
+Anything still ambiguous resolves to nothing: the analyzer would rather
+miss an edge than invent one (missed edges are the runtime witness's
+job to catch; invented edges would drown the report in false cycles).
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .lockmap import LockMap, _dotted
+
+# method names too generic to resolve by uniqueness — they collide with
+# list/dict/set/str/queue/file methods and would wire the graph to noise
+_GENERIC_METHODS = frozenset({
+    "append", "add", "get", "put", "pop", "items", "keys", "values",
+    "sort", "join", "split", "update", "extend", "remove", "clear",
+    "copy", "index", "count", "insert", "read", "write", "close",
+    "open", "flush", "seek", "send", "recv", "start", "stop", "run",
+    "result", "set", "wait", "map", "submit", "acquire", "release",
+    "setdefault", "format", "strip", "encode", "decode", "search",
+    "match", "group", "commit", "abort", "snapshot", "reset",
+})
+
+
+@dataclass
+class FuncInfo:
+    qualname: str                      # "path.py::Class.meth" or "path.py::fn"
+    module: str
+    cls: str                           # "" for module-level functions
+    name: str
+    node: ast.AST
+    line: int = 0
+    # filled by the scanning passes (lockorder/blocking)
+    events: list = field(default_factory=list)
+
+
+class CallGraph:
+    def __init__(self, modules: Dict[str, ast.Module], lockmap: LockMap):
+        self.modules = modules
+        self.lockmap = lockmap
+        self.functions: Dict[str, FuncInfo] = {}
+        # name -> [qualname]  (module-level functions)
+        self._globals_by_module: Dict[Tuple[str, str], str] = {}
+        self._globals_by_name: Dict[str, List[str]] = {}
+        # (cls, meth) -> qualname ; meth -> [qualname]
+        self._methods: Dict[Tuple[str, str], str] = {}
+        self._methods_by_name: Dict[str, List[str]] = {}
+        self._index()
+
+    # -- indexing ---------------------------------------------------------- #
+    def _index(self) -> None:
+        for module, tree in self.modules.items():
+            for node in tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self._add_func(module, "", node)
+                elif isinstance(node, ast.ClassDef):
+                    for sub in node.body:
+                        if isinstance(sub, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef)):
+                            self._add_func(module, node.name, sub)
+
+    def _add_func(self, module: str, cls: str,
+                  node: ast.FunctionDef) -> None:
+        qual = (f"{module}::{cls}.{node.name}" if cls
+                else f"{module}::{node.name}")
+        fi = FuncInfo(qualname=qual, module=module, cls=cls,
+                      name=node.name, node=node, line=node.lineno)
+        self.functions[qual] = fi
+        if cls:
+            self._methods.setdefault((cls, node.name), qual)
+            self._methods_by_name.setdefault(node.name, []).append(qual)
+        else:
+            self._globals_by_module.setdefault((module, node.name), qual)
+            self._globals_by_name.setdefault(node.name, []).append(qual)
+
+    # -- receiver typing --------------------------------------------------- #
+    def _attr_type(self, cls: str, attr: str, module: str) -> Optional[str]:
+        t = self.lockmap.attr_types.get((cls, attr))
+        if t is not None:
+            return t
+        pairs = self.lockmap.attr_types_by_attr.get(attr, [])
+        types = {t for _, t in pairs}
+        if len(types) == 1:
+            return next(iter(types))
+        return None
+
+    def resolve_call(self, call: ast.Call, module: str, cls: str,
+                     local_types: Dict[str, str]) -> Optional[str]:
+        fn = call.func
+        # f(...) — plain name
+        if isinstance(fn, ast.Name):
+            got = self._globals_by_module.get((module, fn.id))
+            if got is not None:
+                return got
+            cands = self._globals_by_name.get(fn.id, [])
+            if len(cands) == 1:
+                return cands[0]
+            return None
+        if not isinstance(fn, ast.Attribute):
+            return None
+        meth = fn.attr
+        recv = fn.value
+        # self.m(...)
+        if isinstance(recv, ast.Name) and recv.id == "self" and cls:
+            got = self._methods.get((cls, meth))
+            if got is not None:
+                return got
+        # typed receivers
+        recv_type: Optional[str] = None
+        if isinstance(recv, ast.Name):
+            recv_type = local_types.get(recv.id)
+        elif isinstance(recv, ast.Attribute):
+            base = recv.value
+            if isinstance(base, ast.Name) and base.id == "self" and cls:
+                recv_type = self._attr_type(cls, recv.attr, module)
+            else:
+                recv_type = self._attr_type("", recv.attr, module)
+        elif isinstance(recv, ast.Call):
+            # registry().counter(...) style: type = callee's return class
+            path = _dotted(recv.func)
+            if path is not None:
+                tail = path.rsplit(".", 1)[-1]
+                recv_type = self._return_type(tail)
+        if recv_type is not None:
+            got = self._methods.get((recv_type, meth))
+            if got is not None:
+                return got
+        # unique-method fallback
+        if meth not in _GENERIC_METHODS:
+            cands = self._methods_by_name.get(meth, [])
+            if len(cands) == 1:
+                return cands[0]
+        return None
+
+    def lock_like_classes(self) -> set:
+        """Classes that implement the lock protocol themselves
+        (``acquire`` + ``release`` + ``__enter__``).  Their *internals*
+        are the lock implementation, not client acquisition order, and
+        are skipped by the lock-order scanner — a ProfiledLock timing a
+        contended acquire is not a client re-acquiring a held lock."""
+        out = set()
+        for (cls, meth) in self._methods:
+            if meth == "acquire" and (cls, "release") in self._methods \
+                    and (cls, "__enter__") in self._methods:
+                out.add(cls)
+        return out
+
+    def _return_type(self, func_name: str) -> Optional[str]:
+        """Return-annotation type of the unique global ``func_name``."""
+        cands = self._globals_by_name.get(func_name, [])
+        if len(cands) != 1:
+            return None
+        node = self.functions[cands[0]].node
+        ret = getattr(node, "returns", None)
+        if isinstance(ret, ast.Name):
+            return ret.id
+        if isinstance(ret, ast.Constant) and isinstance(ret.value, str):
+            return ret.value.strip('"\'')
+        if isinstance(ret, ast.Attribute):
+            return ret.attr
+        return None
+
+
+def infer_local_types(fn_node: ast.AST, graph: "CallGraph",
+                      module: str, cls: str) -> Dict[str, str]:
+    """``var = SomeClass(...)`` / ``var = registry()`` → {var: TypeName}.
+
+    One linear pass; last assignment wins.  Also follows
+    ``var = self.attr`` through the constructor-assignment type map.
+    """
+    out: Dict[str, str] = {}
+    for stmt in ast.walk(fn_node):
+        if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+            continue
+        tgt = stmt.targets[0]
+        if not isinstance(tgt, ast.Name):
+            continue
+        val = stmt.value
+        if isinstance(val, ast.Call):
+            path = _dotted(val.func)
+            if path is None:
+                continue
+            tail = path.rsplit(".", 1)[-1]
+            if tail and tail[0].isupper():
+                out[tgt.id] = tail
+            else:
+                ret = graph._return_type(tail)
+                if ret is not None:
+                    out[tgt.id] = ret
+        elif isinstance(val, ast.Attribute):
+            base = val.value
+            if isinstance(base, ast.Name) and base.id == "self" and cls:
+                t = graph._attr_type(cls, val.attr, module)
+                if t is not None:
+                    out[tgt.id] = t
+    return out

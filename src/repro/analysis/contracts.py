@@ -1,0 +1,226 @@
+"""Contract lints: code ↔ documentation ↔ hot-path discipline.
+
+Three checks over every analyzed module:
+
+* **undeclared-metric / metric-labels** — every
+  ``registry().counter/gauge/histogram(name, ...)`` site with a constant
+  name must use a metric name from the ``docs/architecture.md`` catalog,
+  with exactly the documented label set.  The docs are the schema; an
+  undocumented metric is a finding, so the catalog stays complete by
+  construction.  Dynamic names are skipped (nothing to check
+  statically).
+* **unguarded-metric** — in hot-path modules, metric mutation sites must
+  be guarded on ``registry().enabled`` (directly in an enclosing ``if``,
+  via an early ``if not reg.enabled: return``, or through a local
+  variable derived from ``.enabled``).  Constructors (``__init__``) are
+  exempt: family pre-creation is one-time work.
+* **undeclared-span** — every ``obs.span("name", ...)`` constant name
+  must appear in the span catalog table.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from .callgraph import CallGraph, infer_local_types
+from .config import Catalog
+from .findings import Finding
+from .lockmap import _dotted
+
+_METRIC_METHODS = {"counter", "gauge", "histogram"}
+_CONFIG_KWARGS = {
+    "counter": {"help"},
+    "gauge": {"help"},
+    "histogram": {"help", "lo", "hi", "per_decade"},
+}
+
+# modules where metric mutation sits on the request path — guard required
+HOT_MODULES = (
+    "core/index.py",
+    "dist/shard_router.py",
+    "dist/parallel.py",
+    "train/serve.py",
+)
+
+
+def _is_hot_module(module: str) -> bool:
+    m = module.replace("\\", "/")
+    return any(m.endswith(h) for h in HOT_MODULES)
+
+
+def _is_metric_site(call: ast.Call, graph: CallGraph, module: str,
+                    cls: str, local_types: Dict[str, str]) -> Optional[str]:
+    """The accessor name ('counter'/...) when ``call`` hits the registry."""
+    fn = call.func
+    if not isinstance(fn, ast.Attribute) or fn.attr not in _METRIC_METHODS:
+        return None
+    target = graph.resolve_call(call, module, cls, local_types)
+    if target is not None and target.endswith(f"::MetricsRegistry.{fn.attr}"):
+        return fn.attr
+    # textual fallback for trees analyzed without the obs package
+    # (test fixtures): obs.registry().counter(...), reg.counter(...)
+    recv = ast.unparse(fn.value).lower()
+    if "registry" in recv or recv in ("reg", "self._reg", "self._registry"):
+        return fn.attr
+    return None
+
+
+def _const_name(call: ast.Call) -> Optional[str]:
+    if call.args and isinstance(call.args[0], ast.Constant) \
+            and isinstance(call.args[0].value, str):
+        return call.args[0].value
+    return None
+
+
+def _guard_vars(fn_node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for stmt in ast.walk(fn_node):
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            if ".enabled" in ast.unparse(stmt.value):
+                out.add(stmt.targets[0].id)
+    return out
+
+
+def _is_guard_test(test: ast.expr, guard_vars: Set[str]) -> bool:
+    if ".enabled" in ast.unparse(test):
+        return True
+    return any(isinstance(n, ast.Name) and n.id in guard_vars
+               for n in ast.walk(test))
+
+
+def _terminates(body: List[ast.stmt]) -> bool:
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+class _Collector:
+    """Walks one function, tagging metric/span call sites with whether a
+    ``registry().enabled`` guard dominates them."""
+
+    def __init__(self, guard_vars: Set[str]):
+        self.guard_vars = guard_vars
+        # (call node, guarded?)
+        self.sites: List = []
+
+    def walk(self, body: List[ast.stmt], guarded: bool) -> None:
+        i = 0
+        while i < len(body):
+            stmt = body[i]
+            if isinstance(stmt, ast.If):
+                self._calls(stmt.test, guarded)
+                if _is_guard_test(stmt.test, self.guard_vars):
+                    if _terminates(stmt.body):
+                        # `if not reg.enabled: return` — dominates the rest
+                        self.walk(stmt.body, guarded)
+                        self.walk(stmt.orelse, True)
+                        self.walk(body[i + 1:], True)
+                        return
+                    self.walk(stmt.body, True)
+                    self.walk(stmt.orelse, guarded)
+                else:
+                    self.walk(stmt.body, guarded)
+                    self.walk(stmt.orelse, guarded)
+            elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                self._calls(stmt.iter, guarded)
+                self.walk(stmt.body, guarded)
+                self.walk(stmt.orelse, guarded)
+            elif isinstance(stmt, ast.While):
+                self._calls(stmt.test, guarded)
+                self.walk(stmt.body, guarded)
+                self.walk(stmt.orelse, guarded)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    self._calls(item.context_expr, guarded)
+                self.walk(stmt.body, guarded)
+            elif isinstance(stmt, ast.Try):
+                self.walk(stmt.body, guarded)
+                for h in stmt.handlers:
+                    self.walk(h.body, guarded)
+                self.walk(stmt.orelse, guarded)
+                self.walk(stmt.finalbody, guarded)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                pass
+            else:
+                self._calls(stmt, guarded)
+            i += 1
+
+    def _calls(self, node: ast.AST, guarded: bool) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                self.sites.append((sub, guarded))
+
+
+def analyze_contracts(graph: CallGraph, catalog: Catalog) -> List[Finding]:
+    findings: List[Finding] = []
+    seen: Set[str] = set()
+
+    def emit(kind: str, fid: str, message: str, module: str,
+             line: int) -> None:
+        if fid in seen:
+            return
+        seen.add(fid)
+        findings.append(Finding(kind=kind, id=fid, message=message,
+                                module=module, line=line))
+
+    for qual, fi in graph.functions.items():
+        in_obs = "/obs/" in fi.module.replace("\\", "/")
+        local_types = infer_local_types(fi.node, graph, fi.module, fi.cls)
+        coll = _Collector(_guard_vars(fi.node))
+        coll.walk(fi.node.body, False)
+        fn_name = qual.split("::")[-1]
+        for call, guarded in coll.sites:
+            path = _dotted(call.func)
+            # spans -------------------------------------------------- #
+            if (path is not None and path.rsplit(".", 1)[-1] == "span"
+                    and not in_obs and catalog.spans):
+                name = _const_name(call)
+                if name is not None and name not in catalog.spans:
+                    emit("undeclared-span", f"undeclared-span:{name}",
+                         f"span {name!r} at {fi.module}:{call.lineno} is "
+                         f"not in the span catalog "
+                         f"(docs/architecture.md §6)",
+                         fi.module, call.lineno)
+                continue
+            # metrics ------------------------------------------------ #
+            accessor = _is_metric_site(call, graph, fi.module, fi.cls,
+                                       local_types)
+            if accessor is None:
+                continue
+            name = _const_name(call)
+            if name is None:
+                continue        # dynamic name — witness territory
+            if catalog.metrics:
+                if name not in catalog.metrics:
+                    emit("undeclared-metric", f"undeclared-metric:{name}",
+                         f"metric {name!r} at {fi.module}:{call.lineno} "
+                         f"is not in the metric catalog "
+                         f"(docs/architecture.md §6)",
+                         fi.module, call.lineno)
+                else:
+                    kwargs = {kw.arg for kw in call.keywords
+                              if kw.arg is not None}
+                    dynamic = any(kw.arg is None for kw in call.keywords)
+                    labels = kwargs - _CONFIG_KWARGS[accessor]
+                    want = catalog.metrics[name]
+                    if not dynamic and labels != want:
+                        emit("metric-labels",
+                             f"metric-labels:{name}:{fn_name}",
+                             f"metric {name!r} at "
+                             f"{fi.module}:{call.lineno} uses labels "
+                             f"{sorted(labels)} but the catalog declares "
+                             f"{sorted(want)}",
+                             fi.module, call.lineno)
+            # hot-path guard ----------------------------------------- #
+            if (_is_hot_module(fi.module) and not in_obs
+                    and not guarded and fi.name != "__init__"):
+                emit("unguarded-metric",
+                     f"unguarded-metric:{name}:{fn_name}",
+                     f"hot-path metric site {name!r} at "
+                     f"{fi.module}:{call.lineno} ({fn_name}) is not "
+                     f"guarded on registry().enabled — disabled-telemetry "
+                     f"runs still pay the family lookup",
+                     fi.module, call.lineno)
+    return findings

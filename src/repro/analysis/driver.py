@@ -1,0 +1,169 @@
+"""Pass orchestration + report for ``python -m repro.analysis``.
+
+``run_analysis`` parses every ``.py`` under the given paths, builds the
+lock map and call graph once, runs the three passes (lock order,
+blocking-under-lock, contracts), then filters through the
+justification-required suppression file.  Exit is nonzero iff any
+*unsuppressed* finding remains — the CI gate.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .blocking import analyze_blocking, blocking_set
+from .callgraph import CallGraph
+from .config import Catalog, Hierarchy, default_paths, find_repo_root
+from .contracts import analyze_contracts
+from .findings import Finding, Suppressions
+from .lockmap import build_lockmap
+from .lockorder import LockOrderResult, analyze_lock_order
+
+
+@dataclass
+class AnalysisReport:
+    findings: List[Finding] = field(default_factory=list)       # all
+    active: List[Finding] = field(default_factory=list)         # unsuppressed
+    suppressed: List[Tuple[Finding, str]] = field(default_factory=list)
+    unused_suppressions: List[str] = field(default_factory=list)
+    lock_order: Optional[LockOrderResult] = None
+    modules: List[str] = field(default_factory=list)
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.active else 0
+
+    def render(self, verbose: bool = False) -> str:
+        lines: List[str] = []
+        for f in self.active:
+            lines.append(f.format())
+        if self.suppressed and verbose:
+            lines.append(f"-- {len(self.suppressed)} suppressed:")
+            for f, reason in self.suppressed:
+                lines.append(f"   {f.id}  ({reason})")
+        for sid in self.unused_suppressions:
+            lines.append(f"warning: suppression {sid!r} matched nothing "
+                         "(stale entry?)")
+        n_edges = len(self.lock_order.edges) if self.lock_order else 0
+        lines.append(
+            f"repro.analysis: {len(self.modules)} modules, "
+            f"{n_edges} lock-order edges, "
+            f"{len(self.findings)} findings "
+            f"({len(self.active)} active, {len(self.suppressed)} "
+            f"suppressed)")
+        return "\n".join(lines)
+
+    def to_json(self) -> dict:
+        def fd(f: Finding) -> dict:
+            return {"kind": f.kind, "id": f.id, "message": f.message,
+                    "module": f.module, "line": f.line}
+        return {
+            "modules": len(self.modules),
+            "edges": sorted(f"{a}->{b}" for a, b in
+                            (self.lock_order.edges if self.lock_order
+                             else {})),
+            "active": [fd(f) for f in self.active],
+            "suppressed": [{**fd(f), "reason": r}
+                           for f, r in self.suppressed],
+            "unused_suppressions": self.unused_suppressions,
+        }
+
+
+def collect_sources(paths: List[str], root: str) -> Dict[str, str]:
+    """{repo-relative module path: absolute file path} for every .py."""
+    out: Dict[str, str] = {}
+    for p in paths:
+        p = os.path.abspath(p)
+        if os.path.isfile(p):
+            out[os.path.relpath(p, root)] = p
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = [d for d in dirnames
+                           if d != "__pycache__" and not d.startswith(".")]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    full = os.path.join(dirpath, fn)
+                    out[os.path.relpath(full, root)] = full
+    return out
+
+
+def parse_modules(sources: Dict[str, str]) -> Dict[str, ast.Module]:
+    modules: Dict[str, ast.Module] = {}
+    for rel, full in sorted(sources.items()):
+        with open(full, "r", encoding="utf-8") as fh:
+            text = fh.read()
+        modules[rel.replace("\\", "/")] = ast.parse(text, filename=full)
+    return modules
+
+
+def run_analysis(paths: List[str],
+                 hierarchy_path: Optional[str] = None,
+                 suppressions_path: Optional[str] = None,
+                 catalog_path: Optional[str] = None,
+                 use_defaults: bool = True) -> AnalysisReport:
+    root = find_repo_root(paths[0] if paths else os.getcwd()) or os.getcwd()
+    if use_defaults:
+        dh, ds, dc = default_paths(root)
+        hierarchy_path = hierarchy_path or dh
+        suppressions_path = suppressions_path or ds
+        catalog_path = catalog_path or dc
+
+    hierarchy = Hierarchy.load(hierarchy_path)
+    suppressions = Suppressions.load(suppressions_path)
+    catalog = Catalog.load(catalog_path)
+
+    modules = parse_modules(collect_sources(paths, root))
+    lockmap = build_lockmap(modules)
+    graph = CallGraph(modules, lockmap)
+
+    lo = analyze_lock_order(graph, lockmap, hierarchy,
+                            blocking_set(hierarchy))
+    findings = list(lo.findings)
+    findings += analyze_blocking(graph, lo.events, hierarchy)
+    findings += analyze_contracts(graph, catalog)
+    findings.sort(key=lambda f: (f.kind, f.module, f.line, f.id))
+
+    active, suppressed, unused = suppressions.split(findings)
+    return AnalysisReport(findings=findings, active=active,
+                          suppressed=suppressed,
+                          unused_suppressions=unused,
+                          lock_order=lo,
+                          modules=sorted(modules))
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="concurrency contract checker: lock-order analysis, "
+                    "blocking-under-lock detection, metric/span lints")
+    ap.add_argument("paths", nargs="+", help="files or directories to scan")
+    ap.add_argument("--hierarchy", help="lock_hierarchy.toml "
+                    "(default: <root>/analysis/lock_hierarchy.toml)")
+    ap.add_argument("--suppressions", help="suppressions.toml "
+                    "(default: <root>/analysis/suppressions.toml)")
+    ap.add_argument("--catalog", help="architecture.md with metric/span "
+                    "catalog tables (default: <root>/docs/architecture.md)")
+    ap.add_argument("--no-defaults", action="store_true",
+                    help="do not auto-discover config files")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the report as JSON")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also list suppressed findings")
+    args = ap.parse_args(argv)
+
+    report = run_analysis(args.paths,
+                          hierarchy_path=args.hierarchy,
+                          suppressions_path=args.suppressions,
+                          catalog_path=args.catalog,
+                          use_defaults=not args.no_defaults)
+    if args.as_json:
+        print(json.dumps(report.to_json(), indent=2, sort_keys=True))
+    else:
+        print(report.render(verbose=args.verbose))
+    return report.exit_code

@@ -1,0 +1,208 @@
+"""Lock discovery: find every lock object the tree constructs.
+
+Scans class bodies (``__init__`` and every other method) for
+
+* ``self.x = threading.Lock() / RLock() / Condition()``
+* ``self.x = obs.ProfiledLock("name", ...)`` — the profiled name becomes
+  the lock's canonical identity, shared across instances (every
+  ``ReplicaGroup.write_lock`` is one ``group_write`` lock class)
+* dict-literal values holding locks with constant string keys
+  (``self._ctx = {"rebalance_lock": obs.ProfiledLock("rebalance")}``),
+  so subscript acquisitions (``with w._ctx["rebalance_lock"]``) resolve
+
+and records, as a side product, attribute *types* from
+``self.x = SomeClass(...)`` constructor assignments — the cheap type
+inference the call-graph resolver runs on.
+
+Identity model: one :class:`LockDef` per *lock class*, not per instance.
+A plain lock is named ``Class.attr``; a ProfiledLock is named by its
+profile string.  Acquisition sites resolve ``recv.attr`` by (class,
+attr) when the receiver is ``self``, else by attribute-name uniqueness
+with a same-module preference (see :meth:`LockMap.resolve_attr`).
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_LOCK_CTORS = {"Lock": "lock", "RLock": "rlock", "Condition": "condition"}
+
+
+@dataclass
+class LockDef:
+    name: str           # canonical lock-class name
+    kind: str           # "lock" | "rlock" | "condition" | "profiled"
+    module: str         # repo-relative path
+    cls: str            # owning class ("" for module-level)
+    attr: str           # attribute or dict key it is stored under
+    line: int = 0
+    reentrant: bool = False
+
+    def __repr__(self) -> str:            # pragma: no cover
+        return f"LockDef({self.name!r} {self.kind} @ {self.module}:{self.line})"
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def classify_lock_ctor(call: ast.Call) -> Optional[Tuple[str, Optional[str]]]:
+    """(kind, profiled_name) when ``call`` constructs a lock, else None."""
+    path = _dotted(call.func)
+    if path is None:
+        return None
+    tail = path.rsplit(".", 1)[-1]
+    if tail in _LOCK_CTORS and path in (tail, f"threading.{tail}"):
+        return _LOCK_CTORS[tail], None
+    if tail == "ProfiledLock":
+        pname: Optional[str] = None
+        if call.args and isinstance(call.args[0], ast.Constant) \
+                and isinstance(call.args[0].value, str):
+            pname = call.args[0].value
+        return "profiled", pname
+    return None
+
+
+def profiled_wraps_rlock(call: ast.Call) -> bool:
+    """True when a ProfiledLock ctor call wraps an RLock."""
+    for arg in list(call.args[1:]) + [kw.value for kw in call.keywords]:
+        if isinstance(arg, ast.Call):
+            got = classify_lock_ctor(arg)
+            if got is not None and got[0] == "rlock":
+                return True
+    return False
+
+
+@dataclass
+class LockMap:
+    # canonical name -> LockDef
+    locks: Dict[str, LockDef] = field(default_factory=dict)
+    # (cls, attr) -> canonical name
+    by_class_attr: Dict[Tuple[str, str], str] = field(default_factory=dict)
+    # attr -> [(module, canonical name)]
+    by_attr: Dict[str, List[Tuple[str, str]]] = field(default_factory=dict)
+    # dict-literal key -> canonical name
+    by_key: Dict[str, str] = field(default_factory=dict)
+    # (cls, attr) -> constructed type name   (cheap type inference)
+    attr_types: Dict[Tuple[str, str], str] = field(default_factory=dict)
+    # attr -> [(cls, type)] across all classes
+    attr_types_by_attr: Dict[str, List[Tuple[str, str]]] = \
+        field(default_factory=dict)
+
+    # -- registration ------------------------------------------------------ #
+    def _add(self, d: LockDef) -> None:
+        prior = self.locks.get(d.name)
+        if prior is None:
+            self.locks[d.name] = d
+        elif prior.kind != d.kind and d.kind == "rlock":
+            prior.reentrant = True
+        if d.attr:
+            self.by_class_attr.setdefault((d.cls, d.attr), d.name)
+            pairs = self.by_attr.setdefault(d.attr, [])
+            if (d.module, d.name) not in pairs:
+                pairs.append((d.module, d.name))
+
+    def _add_type(self, cls: str, attr: str, type_name: str) -> None:
+        self.attr_types.setdefault((cls, attr), type_name)
+        pairs = self.attr_types_by_attr.setdefault(attr, [])
+        if (cls, type_name) not in pairs:
+            pairs.append((cls, type_name))
+
+    # -- resolution -------------------------------------------------------- #
+    def resolve_self_attr(self, cls: str, attr: str) -> Optional[str]:
+        return self.by_class_attr.get((cls, attr))
+
+    def resolve_attr(self, attr: str, module: str = "") -> Optional[str]:
+        """Resolve ``<expr>.attr`` by attribute-name uniqueness; when the
+        attr is defined in several classes, prefer the current module's
+        definition; still-ambiguous resolutions return None (the scanner
+        skips rather than invents edges)."""
+        pairs = self.by_attr.get(attr)
+        if not pairs:
+            return None
+        names = {n for _, n in pairs}
+        if len(names) == 1:
+            return next(iter(names))
+        local = {n for m, n in pairs if m == module}
+        if len(local) == 1:
+            return next(iter(local))
+        return None
+
+    def resolve_key(self, key: str) -> Optional[str]:
+        return self.by_key.get(key)
+
+
+def _scan_assign_value(lm: LockMap, module: str, cls: str, attr: str,
+                       value: ast.AST, line: int) -> None:
+    if isinstance(value, ast.Call):
+        got = classify_lock_ctor(value)
+        if got is not None:
+            kind, pname = got
+            if kind == "profiled":
+                name = pname or f"{cls}.{attr}" or attr
+                lm._add(LockDef(name=name, kind="profiled", module=module,
+                                cls=cls, attr=attr, line=line,
+                                reentrant=profiled_wraps_rlock(value)))
+            else:
+                name = f"{cls}.{attr}" if cls else attr
+                lm._add(LockDef(name=name, kind=kind, module=module,
+                                cls=cls, attr=attr, line=line,
+                                reentrant=(kind == "rlock")))
+            return
+        # plain constructor → attribute type
+        path = _dotted(value.func)
+        if path is not None:
+            type_name = path.rsplit(".", 1)[-1]
+            if type_name and type_name[0].isupper():
+                lm._add_type(cls, attr, type_name)
+    elif isinstance(value, ast.Dict):
+        for k, v in zip(value.keys, value.values):
+            if (isinstance(k, ast.Constant) and isinstance(k.value, str)
+                    and isinstance(v, ast.Call)):
+                got = classify_lock_ctor(v)
+                if got is None:
+                    continue
+                kind, pname = got
+                name = pname or f"{cls}.{k.value}"
+                lm._add(LockDef(name=name, kind="profiled"
+                                if kind == "profiled" else kind,
+                                module=module, cls=cls, attr="",
+                                line=v.lineno,
+                                reentrant=(kind == "rlock"
+                                           or (kind == "profiled"
+                                               and profiled_wraps_rlock(v)))))
+                lm.by_key.setdefault(k.value, name)
+
+
+def build_lockmap(modules: Dict[str, ast.Module]) -> LockMap:
+    """Scan every parsed module (repo-relative path → AST)."""
+    lm = LockMap()
+    for module, tree in modules.items():
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            cls = node.name
+            for fn in node.body:
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    continue
+                for stmt in ast.walk(fn):
+                    if not isinstance(stmt, ast.Assign):
+                        continue
+                    for tgt in stmt.targets:
+                        if (isinstance(tgt, ast.Attribute)
+                                and isinstance(tgt.value, ast.Name)
+                                and tgt.value.id == "self"):
+                            _scan_assign_value(lm, module, cls, tgt.attr,
+                                               stmt.value, stmt.lineno)
+    return lm

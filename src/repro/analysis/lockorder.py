@@ -1,0 +1,449 @@
+"""Lock-order analysis: the interprocedural acquisition graph.
+
+Per function, a linear abstract scan tracks which lock classes are held
+(``with``-statement nesting plus explicit ``.acquire()``/``.release()``
+bookkeeping, including locks a helper *leaves held on return* — the
+``_acquire_locks``/``_release_locks`` pattern).  Every acquisition event
+and every call into another analyzed function is recorded with the
+held-set at that point; a fixpoint over the call graph then expands
+calls into edges ``held → may-acquire(callee)``.
+
+On the resulting digraph of lock classes the checker reports:
+
+* **cycles** — a potential deadlock, regardless of any declared order;
+* **hierarchy violations** — an edge from a lower-ranked (inner) lock to
+  a higher-ranked (outer) one per ``analysis/lock_hierarchy.toml``;
+* **self-deadlocks** — re-acquiring a held non-reentrant single-instance
+  lock;
+* **unordered multi-acquires** — a loop acquiring an ``ascending``-class
+  lock (many instances, group-write rule) without iterating a
+  ``sorted(...)``/``range(...)`` sequence.
+
+The static graph deliberately over-approximates reachability and
+under-approximates aliasing; the runtime :class:`repro.obs.LockWitness`
+covers the remainder from observed executions.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .callgraph import CallGraph, FuncInfo, infer_local_types
+from .config import Hierarchy
+from .findings import Finding
+from .lockmap import LockMap, _dotted
+
+
+# --------------------------------------------------------------------- #
+# events
+# --------------------------------------------------------------------- #
+@dataclass
+class AcqEvent:
+    lock: str
+    held: Tuple[str, ...]
+    line: int
+    loop: Optional[str] = None      # None | "sorted" | "unsorted"
+    floating: bool = False          # bare .acquire(), not a with-block
+
+
+@dataclass
+class CallEvent:
+    target: str                     # qualname
+    held: Tuple[str, ...]
+    line: int
+
+
+@dataclass
+class BlockEvent:
+    call: str                       # dotted name, e.g. "os.fsync"
+    held: Tuple[str, ...]
+    line: int
+
+
+# --------------------------------------------------------------------- #
+# lock-expression resolution
+# --------------------------------------------------------------------- #
+def resolve_lock_expr(expr: ast.AST, cls: str, module: str,
+                      lockmap: LockMap) -> Optional[str]:
+    if isinstance(expr, ast.Attribute):
+        if isinstance(expr.value, ast.Name) and expr.value.id == "self":
+            got = lockmap.resolve_self_attr(cls, expr.attr)
+            if got is not None:
+                return got
+        return lockmap.resolve_attr(expr.attr, module)
+    if isinstance(expr, ast.Subscript):
+        sl = expr.slice
+        if isinstance(sl, ast.Constant) and isinstance(sl.value, str):
+            return lockmap.resolve_key(sl.value)
+    return None
+
+
+def _iter_is_ordered(it: ast.AST) -> bool:
+    """True when a loop iterates an inherently ordered sequence."""
+    if isinstance(it, ast.Call) and isinstance(it.func, ast.Name):
+        return it.func.id in ("sorted", "range", "enumerate", "reversed")
+    return False
+
+
+# --------------------------------------------------------------------- #
+# the per-function scanner
+# --------------------------------------------------------------------- #
+class _FnScanner:
+    def __init__(self, fi: FuncInfo, graph: CallGraph, lockmap: LockMap,
+                 blocking: Set[str],
+                 held_on_return: Dict[str, Tuple[str, ...]],
+                 releases: Dict[str, Tuple[str, ...]]):
+        self.fi = fi
+        self.graph = graph
+        self.lockmap = lockmap
+        self.blocking = blocking
+        self.H = held_on_return
+        self.R = releases
+        self.local_types = infer_local_types(fi.node, graph,
+                                             fi.module, fi.cls)
+        self.with_stack: List[str] = []
+        self.floating: Dict[str, int] = {}
+        self.foreign_releases: List[str] = []
+        self.events: List[object] = []
+        self.loop_ctx: List[str] = []       # "sorted"/"unsorted" markers
+
+    # -- held-set ---------------------------------------------------------- #
+    def _held(self) -> Tuple[str, ...]:
+        seen, out = set(), []
+        for name in self.with_stack + list(self.floating):
+            if name not in seen:
+                seen.add(name)
+                out.append(name)
+        return tuple(out)
+
+    # -- entry ------------------------------------------------------------- #
+    def scan(self) -> None:
+        self._stmts(self.fi.node.body)
+
+    def _stmts(self, body: Sequence[ast.stmt]) -> None:
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.With):
+            self._with(stmt)
+        elif isinstance(stmt, ast.For):
+            self._exprs(stmt.iter)
+            marker = "sorted" if _iter_is_ordered(stmt.iter) else "unsorted"
+            self.loop_ctx.append(marker)
+            try:
+                self._stmts(stmt.body)
+                self._stmts(stmt.orelse)
+            finally:
+                self.loop_ctx.pop()
+        elif isinstance(stmt, ast.While):
+            self._exprs(stmt.test)
+            self.loop_ctx.append("unsorted")
+            try:
+                self._stmts(stmt.body)
+                self._stmts(stmt.orelse)
+            finally:
+                self.loop_ctx.pop()
+        elif isinstance(stmt, ast.If):
+            self._exprs(stmt.test)
+            self._stmts(stmt.body)
+            self._stmts(stmt.orelse)
+        elif isinstance(stmt, ast.Try):
+            self._stmts(stmt.body)
+            for h in stmt.handlers:
+                self._stmts(h.body)
+            self._stmts(stmt.orelse)
+            self._stmts(stmt.finalbody)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            pass        # nested defs are separate execution contexts
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                self._exprs(child)
+
+    def _with(self, stmt: ast.With) -> None:
+        pushed = 0
+        try:
+            for item in stmt.items:
+                lock = resolve_lock_expr(item.context_expr, self.fi.cls,
+                                         self.fi.module, self.lockmap)
+                if lock is None:
+                    self._exprs(item.context_expr)
+                else:
+                    self._acquire(lock, item.context_expr.lineno)
+                    self.with_stack.append(lock)
+                    pushed += 1
+            self._stmts(stmt.body)
+        finally:
+            for _ in range(pushed):
+                self.with_stack.pop()
+
+    # -- expression walking ------------------------------------------------ #
+    def _exprs(self, node: Optional[ast.AST]) -> None:
+        if node is None:
+            return
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                self._call(sub)
+
+    def _call(self, call: ast.Call) -> None:
+        fn = call.func
+        # explicit lock protocol: <lockexpr>.acquire() / .release()
+        if isinstance(fn, ast.Attribute) and fn.attr in ("acquire",
+                                                         "release"):
+            lock = resolve_lock_expr(fn.value, self.fi.cls,
+                                     self.fi.module, self.lockmap)
+            if lock is not None:
+                if fn.attr == "acquire":
+                    self._acquire(lock, call.lineno, floating=True)
+                    self.floating[lock] = self.floating.get(lock, 0) + 1
+                else:
+                    if self.floating.get(lock, 0) > 0:
+                        self.floating[lock] -= 1
+                        if not self.floating[lock]:
+                            del self.floating[lock]
+                    else:
+                        self.foreign_releases.append(lock)
+                return
+        # blocking call?
+        path = _dotted(fn)
+        if path is not None and (path in self.blocking
+                                 or path.rsplit(".", 1)[-1] in self.blocking):
+            self.events.append(BlockEvent(call=path, held=self._held(),
+                                          line=call.lineno))
+        # pool fan-out heuristic: .map/.submit on something pool-like
+        if (isinstance(fn, ast.Attribute) and fn.attr in ("map", "submit")
+                and "pool" in ast.dump(fn.value).lower()):
+            self.events.append(BlockEvent(call=f"<pool>.{fn.attr}",
+                                          held=self._held(),
+                                          line=call.lineno))
+        # call into an analyzed function
+        target = self.graph.resolve_call(call, self.fi.module, self.fi.cls,
+                                         self.local_types)
+        if target is not None and target != self.fi.qualname:
+            self.events.append(CallEvent(target=target, held=self._held(),
+                                         line=call.lineno))
+            for a in self.H.get(target, ()):
+                self.floating[a] = self.floating.get(a, 0) + 1
+            for a in self.R.get(target, ()):
+                if self.floating.get(a, 0) > 0:
+                    self.floating[a] -= 1
+                    if not self.floating[a]:
+                        del self.floating[a]
+
+    def _acquire(self, lock: str, line: int, floating: bool = False) -> None:
+        loop = self.loop_ctx[-1] if self.loop_ctx else None
+        self.events.append(AcqEvent(lock=lock, held=self._held(),
+                                    line=line, loop=loop,
+                                    floating=floating))
+
+
+# --------------------------------------------------------------------- #
+# the interprocedural pass
+# --------------------------------------------------------------------- #
+@dataclass
+class Edge:
+    src: str
+    dst: str
+    provenance: List[str] = field(default_factory=list)
+
+
+@dataclass
+class LockOrderResult:
+    edges: Dict[Tuple[str, str], Edge] = field(default_factory=dict)
+    acquires: Dict[str, Set[str]] = field(default_factory=dict)   # A(f)
+    events: Dict[str, List[object]] = field(default_factory=dict)
+    findings: List[Finding] = field(default_factory=list)
+
+
+def _scan_all(graph: CallGraph, lockmap: LockMap, blocking: Set[str],
+              rounds: int = 4) -> Tuple[Dict[str, List[object]],
+                                        Dict[str, Tuple[str, ...]]]:
+    """Fixpoint the held-on-return / releases maps, then return events."""
+    H: Dict[str, Tuple[str, ...]] = {}
+    R: Dict[str, Tuple[str, ...]] = {}
+    events: Dict[str, List[object]] = {}
+    opaque = graph.lock_like_classes()
+    for _ in range(rounds):
+        new_H: Dict[str, Tuple[str, ...]] = {}
+        new_R: Dict[str, Tuple[str, ...]] = {}
+        for qual, fi in graph.functions.items():
+            if fi.cls in opaque:
+                events[qual] = []
+                continue
+            sc = _FnScanner(fi, graph, lockmap, blocking, H, R)
+            sc.scan()
+            events[qual] = sc.events
+            if sc.floating:
+                new_H[qual] = tuple(sc.floating)
+            if sc.foreign_releases:
+                new_R[qual] = tuple(dict.fromkeys(sc.foreign_releases))
+        if new_H == H and new_R == R:
+            break
+        H, R = new_H, new_R
+    return events, H
+
+
+def _fixpoint_acquires(graph: CallGraph,
+                       events: Dict[str, List[object]]
+                       ) -> Dict[str, Set[str]]:
+    A: Dict[str, Set[str]] = {q: set() for q in graph.functions}
+    for qual, evs in events.items():
+        for ev in evs:
+            if isinstance(ev, AcqEvent):
+                A[qual].add(ev.lock)
+    changed = True
+    while changed:
+        changed = False
+        for qual, evs in events.items():
+            for ev in evs:
+                if isinstance(ev, CallEvent):
+                    extra = A.get(ev.target, set()) - A[qual]
+                    if extra:
+                        A[qual] |= extra
+                        changed = True
+    return A
+
+
+def _shortest_cycle(edges: Dict[Tuple[str, str], Edge],
+                    start: str) -> Optional[List[str]]:
+    """BFS for the shortest cycle through ``start``."""
+    adj: Dict[str, List[str]] = {}
+    for (a, b) in edges:
+        adj.setdefault(a, []).append(b)
+    frontier = [[start]]
+    seen = set()
+    while frontier:
+        nxt = []
+        for path in frontier:
+            for b in adj.get(path[-1], []):
+                if b == start:
+                    return path + [b]
+                if b not in seen:
+                    seen.add(b)
+                    nxt.append(path + [b])
+        frontier = nxt
+    return None
+
+
+def analyze_lock_order(graph: CallGraph, lockmap: LockMap,
+                       hierarchy: Hierarchy,
+                       blocking: Set[str]) -> LockOrderResult:
+    res = LockOrderResult()
+    events, _ = _scan_all(graph, lockmap, blocking)
+    res.events = events
+    A = _fixpoint_acquires(graph, events)
+    res.acquires = A
+
+    def is_reentrant(name: str) -> bool:
+        d = lockmap.locks.get(name)
+        return (d is not None and d.reentrant) \
+            or hierarchy.multi(name) == "reentrant"
+
+    def add_edge(a: str, b: str, prov: str) -> None:
+        e = res.edges.get((a, b))
+        if e is None:
+            e = res.edges[(a, b)] = Edge(src=a, dst=b)
+        if len(e.provenance) < 3 and prov not in e.provenance:
+            e.provenance.append(prov)
+
+    seen_self: Set[Tuple[str, str]] = set()
+    seen_loop: Set[Tuple[str, str]] = set()
+    for qual, evs in events.items():
+        fi = graph.functions[qual]
+        for ev in evs:
+            if isinstance(ev, AcqEvent):
+                prov = f"{fi.module}:{ev.line} ({qual.split('::')[-1]})"
+                for h in ev.held:
+                    if h == ev.lock:
+                        if (hierarchy.multi(h) == "ascending"
+                                or is_reentrant(h)):
+                            continue
+                        key = (qual, h)
+                        if key not in seen_self:
+                            seen_self.add(key)
+                            res.findings.append(Finding(
+                                kind="self-deadlock",
+                                id=f"self-deadlock:{h}:{qual.split('::')[-1]}",
+                                message=(f"non-reentrant lock {h!r} "
+                                         f"re-acquired while already held "
+                                         f"at {prov}"),
+                                module=fi.module, line=ev.line))
+                    else:
+                        add_edge(h, ev.lock, prov)
+                # only *accumulating* loop acquires can violate the
+                # ascending rule — a per-iteration `with` releases before
+                # the next instance is taken
+                if (ev.loop == "unsorted" and ev.floating
+                        and hierarchy.multi(ev.lock) == "ascending"):
+                    key = (qual, ev.lock)
+                    if key not in seen_loop:
+                        seen_loop.add(key)
+                        res.findings.append(Finding(
+                            kind="unordered-multi-acquire",
+                            id=(f"unordered-multi-acquire:{ev.lock}:"
+                                f"{qual.split('::')[-1]}"),
+                            message=(f"{ev.lock!r} instances acquired in a "
+                                     f"loop whose iteration order is not "
+                                     f"sorted at {prov} — the "
+                                     f"ascending-order rule cannot hold"),
+                            module=fi.module, line=ev.line))
+            elif isinstance(ev, CallEvent):
+                if not ev.held:
+                    continue
+                prov = (f"{fi.module}:{ev.line} "
+                        f"({qual.split('::')[-1]} → "
+                        f"{ev.target.split('::')[-1]})")
+                for a in A.get(ev.target, ()):
+                    for h in ev.held:
+                        if h == a:
+                            continue
+                        add_edge(h, a, prov)
+
+    # hierarchy violations
+    for (a, b), edge in sorted(res.edges.items()):
+        ra, rb = hierarchy.rank(a), hierarchy.rank(b)
+        if ra is None or rb is None or ra <= rb:
+            continue
+        module, line = "", 0
+        if edge.provenance:
+            mod_line = edge.provenance[0].split(" ")[0]
+            module, _, lineno = mod_line.rpartition(":")
+            if lineno.isdigit():
+                line = int(lineno)
+        res.findings.append(Finding(
+            kind="lock-hierarchy",
+            id=f"lock-hierarchy:{a}->{b}",
+            message=(f"declared order puts {b!r} (rank {rb}) above "
+                     f"{a!r} (rank {ra}), but {b!r} is acquired while "
+                     f"{a!r} is held: " + "; ".join(edge.provenance)),
+            module=module, line=line))
+
+    # cycles (excluding self-loops, reported above)
+    in_cycle_reported: Set[str] = set()
+    for node in sorted({a for a, _ in res.edges}):
+        if node in in_cycle_reported:
+            continue
+        cyc = _shortest_cycle(res.edges, node)
+        if cyc is None:
+            continue
+        # normalize: rotate so the lexicographically smallest lock leads
+        body = cyc[:-1]
+        k = body.index(min(body))
+        norm = body[k:] + body[:k] + [body[k]]
+        in_cycle_reported.update(body)
+        cyc_id = "->".join(norm)
+        provs = []
+        for a, b in zip(norm, norm[1:]):
+            e = res.edges.get((a, b))
+            if e is not None and e.provenance:
+                provs.append(f"{a}→{b} at {e.provenance[0]}")
+        res.findings.append(Finding(
+            kind="lock-cycle",
+            id=f"lock-cycle:{cyc_id}",
+            message=("potential deadlock: lock classes form a cycle "
+                     + " ; ".join(provs)),
+            module="", line=0))
+    return res

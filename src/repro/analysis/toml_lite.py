@@ -1,0 +1,166 @@
+"""A small TOML-subset reader for the analysis config files.
+
+The container pins Python 3.10 (no stdlib ``tomllib``) and the repo adds
+no third-party deps, so the two analysis config files —
+``analysis/lock_hierarchy.toml`` and ``analysis/suppressions.toml`` —
+are parsed by this deliberately small reader.  Supported subset:
+
+* ``[section]``, ``[a.b]``, ``[a."quoted name"]`` tables
+* ``[[name]]`` arrays of tables
+* ``key = value`` with string / int / float / bool / array-of-scalars
+  values (arrays may span multiple lines)
+* ``#`` comments and blank lines
+
+That covers everything the checker needs while staying honest: a
+construct outside the subset raises ``TomlError`` instead of silently
+misparsing.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Tuple
+
+
+class TomlError(ValueError):
+    pass
+
+
+_KEY_RE = re.compile(r'^([A-Za-z0-9_\-]+|"[^"]*")\s*=\s*(.*)$')
+
+
+def _parse_key(raw: str) -> str:
+    raw = raw.strip()
+    if raw.startswith('"') and raw.endswith('"'):
+        return raw[1:-1]
+    return raw
+
+
+def _split_dotted(header: str) -> List[str]:
+    """Split ``a.b."c.d"`` into ['a', 'b', 'c.d']."""
+    parts, buf, i, n = [], "", 0, len(header)
+    while i < n:
+        c = header[i]
+        if c == '"':
+            j = header.index('"', i + 1)
+            buf += header[i + 1:j]
+            i = j + 1
+        elif c == ".":
+            parts.append(buf.strip())
+            buf = ""
+            i += 1
+        else:
+            buf += c
+            i += 1
+    parts.append(buf.strip())
+    if any(not p for p in parts):
+        raise TomlError(f"bad table header: {header!r}")
+    return parts
+
+
+def _strip_comment(line: str) -> str:
+    out, in_str = [], False
+    for c in line:
+        if c == '"':
+            in_str = not in_str
+        if c == "#" and not in_str:
+            break
+        out.append(c)
+    return "".join(out).rstrip()
+
+
+def _parse_scalar(tok: str) -> Any:
+    tok = tok.strip()
+    if tok.startswith('"') and tok.endswith('"') and len(tok) >= 2:
+        return tok[1:-1].replace('\\"', '"').replace("\\\\", "\\")
+    if tok in ("true", "false"):
+        return tok == "true"
+    try:
+        return int(tok)
+    except ValueError:
+        pass
+    try:
+        return float(tok)
+    except ValueError:
+        pass
+    raise TomlError(f"unsupported value: {tok!r}")
+
+
+def _split_array_items(body: str) -> List[str]:
+    items, buf, in_str = [], "", False
+    for c in body:
+        if c == '"':
+            in_str = not in_str
+            buf += c
+        elif c == "," and not in_str:
+            if buf.strip():
+                items.append(buf.strip())
+            buf = ""
+        else:
+            buf += c
+    if buf.strip():
+        items.append(buf.strip())
+    return items
+
+
+def _parse_value(tok: str) -> Any:
+    tok = tok.strip()
+    if tok.startswith("["):
+        if not tok.endswith("]"):
+            raise TomlError(f"unterminated array: {tok!r}")
+        return [_parse_scalar(t) for t in _split_array_items(tok[1:-1])]
+    return _parse_scalar(tok)
+
+
+def loads(text: str) -> Dict[str, Any]:
+    root: Dict[str, Any] = {}
+    current = root
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        line = _strip_comment(lines[i]).strip()
+        i += 1
+        if not line:
+            continue
+        if line.startswith("[["):
+            if not line.endswith("]]"):
+                raise TomlError(f"bad array-of-tables header: {line!r}")
+            path = _split_dotted(line[2:-2])
+            node = root
+            for p in path[:-1]:
+                node = node.setdefault(p, {})
+            arr = node.setdefault(path[-1], [])
+            if not isinstance(arr, list):
+                raise TomlError(f"{'.'.join(path)} is not an array of tables")
+            current = {}
+            arr.append(current)
+            continue
+        if line.startswith("["):
+            if not line.endswith("]"):
+                raise TomlError(f"bad table header: {line!r}")
+            path = _split_dotted(line[1:-1])
+            node = root
+            for p in path:
+                nxt = node.setdefault(p, {})
+                if not isinstance(nxt, dict):
+                    raise TomlError(f"table {p!r} collides with a value")
+                node = nxt
+            current = node
+            continue
+        m = _KEY_RE.match(line)
+        if m is None:
+            raise TomlError(f"cannot parse line: {line!r}")
+        key, val = _parse_key(m.group(1)), m.group(2).strip()
+        # multi-line array: keep consuming until brackets balance
+        while val.startswith("[") and not val.endswith("]"):
+            if i >= len(lines):
+                raise TomlError(f"unterminated array for key {key!r}")
+            val += " " + _strip_comment(lines[i]).strip()
+            i += 1
+        current[key] = _parse_value(val)
+    return root
+
+
+def load(path: str) -> Dict[str, Any]:
+    with open(path, "r", encoding="utf-8") as fh:
+        return loads(fh.read())

@@ -455,7 +455,9 @@ class DynamicIndex:
         # serializes log compaction against ready/commit/abort log appends;
         # _pending holds readied-but-uncommitted records so a compaction
         # never drops the durable phase-1 frame of an in-flight transaction
-        self._durable_lock = threading.RLock()
+        # contention-profiled as "wal" (lock_wait_ms{lock="wal"}) and
+        # witness-tracked: group-commit stalls surface here first
+        self._durable_lock = obs.ProfiledLock("wal", threading.RLock())
         self._pending: Dict[int, dict] = {}
         # merges are serialized; segments with seqnum <= _merge_fence are
         # off-limits to merge_segments (a tiered freeze is copying them out)

@@ -31,6 +31,8 @@ import jax
 import msgpack
 import numpy as np
 
+from repro import obs
+
 _STEP_RE = re.compile(r"^step_(\d{8})$")
 _INDEX_RE = re.compile(r"^(.+)_(\d{8})\.log$")
 _ROUTING_RE = re.compile(r"^(.+)_(\d{8})\.routing\.json$")
@@ -98,7 +100,7 @@ class CheckpointManager:
                      else os.unlink)(path)
                 except OSError:
                     pass
-        self._fs_lock = threading.Lock()
+        self._fs_lock = obs.ProfiledLock("checkpoint_fs")
         self._q: Optional["queue.Queue"] = None
         self._write_error: Optional[BaseException] = None
         if async_write:

@@ -250,7 +250,10 @@ class ReplicaGroup:
         # contention-profiled (lock_wait_ms{lock="group_write"}): commits,
         # swaps, and resurrections queueing here is the first thing to
         # look at when write p95 moves
-        self.write_lock = obs.ProfiledLock("group_write", threading.RLock())
+        # order_key: the lock witness enforces ascending group-id
+        # acquisition across groups (the multi-shard commit discipline)
+        self.write_lock = obs.ProfiledLock("group_write", threading.RLock(),
+                                           order_key=group_id)
         self.epoch = 0
         self.retired = False                 # merged away: empty, addressable
         self.demoted: Optional[str] = None   # run-set directory when cold

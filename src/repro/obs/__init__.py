@@ -33,6 +33,10 @@ from .rotate import RotatingJsonl
 from .profile import ProfiledLock, SamplingProfiler, phase_timer, profile_for
 from .slo import SLO, SLOMonitor, SLOSignalSource, default_slos
 from .server import AdminServer
+from .witness import LockOrderViolation, LockWitness
+from .witness import active as witness_active
+from .witness import install as install_witness
+from .witness import uninstall as uninstall_witness
 
 
 def enable() -> None:
@@ -56,5 +60,7 @@ __all__ = [
     "ProfiledLock", "SamplingProfiler", "phase_timer", "profile_for",
     "SLO", "SLOMonitor", "SLOSignalSource", "default_slos",
     "AdminServer",
+    "LockOrderViolation", "LockWitness",
+    "install_witness", "uninstall_witness", "witness_active",
     "enable", "disable",
 ]

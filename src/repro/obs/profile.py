@@ -15,7 +15,12 @@ Three instruments, all cheap enough to leave on in production:
   family: the uncontended path is one extra non-blocking ``acquire``
   attempt, so wrapping a hot lock costs nanoseconds until it actually
   blocks.  Wired onto the shard-group write locks, the rebalance lock,
-  the MicroBatcher close lock, and the tiered maintenance lock.
+  the MicroBatcher close lock, the tiered maintenance lock, the WAL
+  durability lock, and the checkpoint filesystem lock.  When a
+  :class:`~repro.obs.witness.LockWitness` is installed, every
+  ProfiledLock acquire/release is also reported to it with the lock's
+  profile name and optional ``order_key``, so the runtime lock-order
+  checker sees exactly the locks the contention profiles see.
 * :func:`phase_timer` — a context manager attributing device-kernel wall
   time to phases (host ``gather``/pack vs device ``compute``), feeding
   the ``kernel_phase_ms{kernel,phase}`` family that
@@ -32,6 +37,7 @@ from contextlib import contextmanager
 from typing import Dict, Optional
 
 from .registry import registry
+from . import witness as _witness
 
 
 # --------------------------------------------------------------------- #
@@ -157,10 +163,18 @@ class ProfiledLock:
     protocol (``with``, ``acquire(blocking, timeout)``, ``release``), and
     wrapping an ``RLock`` keeps reentrancy (the non-blocking attempt of
     an already-owned RLock succeeds).
+
+    When a :class:`repro.obs.witness.LockWitness` is installed, every
+    acquire/release also reports to it with this lock's name and
+    ``order_key`` (the ascending-order key for multi-instance lock
+    classes, e.g. the shard group id for ``group_write``); with no
+    witness installed the hook is one module-attribute load + ``is
+    None`` test.
     """
 
-    def __init__(self, name: str, lock=None):
+    def __init__(self, name: str, lock=None, order_key: Optional[int] = None):
         self.name = name
+        self.order_key = order_key
         self._lock = lock if lock is not None else threading.Lock()
         reg = registry()
         self._wait = reg.histogram(
@@ -172,6 +186,9 @@ class ProfiledLock:
 
     def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
         if self._lock.acquire(False):
+            w = _witness._active
+            if w is not None:
+                w.note_acquire(self.name, self.order_key, id(self._lock))
             return True
         if not blocking:
             return False
@@ -179,9 +196,16 @@ class ProfiledLock:
         ok = self._lock.acquire(True, timeout)
         self._wait.observe(1e3 * (time.perf_counter() - t0))
         self._contended.inc()
+        if ok:
+            w = _witness._active
+            if w is not None:
+                w.note_acquire(self.name, self.order_key, id(self._lock))
         return ok
 
     def release(self) -> None:
+        w = _witness._active
+        if w is not None:
+            w.note_release(self.name, id(self._lock))
         self._lock.release()
 
     def locked(self) -> bool:

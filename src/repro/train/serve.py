@@ -255,10 +255,13 @@ class RetrievalServer:
         key = (qp, tp, l, nb, self.k)
         if key not in self._seen_shapes:
             self._seen_shapes.add(key)
-            obs.registry().counter(
-                "serve_jit_recompile_total",
-                "distinct (batch, terms, postings, accumulator) device "
-                "shape buckets scored — each costs one XLA compile").inc()
+            reg = obs.registry()
+            if reg.enabled:
+                reg.counter(
+                    "serve_jit_recompile_total",
+                    "distinct (batch, terms, postings, accumulator) device "
+                    "shape buckets scored — each costs one XLA compile"
+                ).inc()
 
     # -- single-index path ------------------------------------------------- #
     def _handle_single(self, queries: List[str]

@@ -1,0 +1,26 @@
+"""Analyzer fixture: blocking I/O while a hot lock is held.
+
+``flush`` fsyncs under the (declared-hot) lock directly; ``save`` does
+it transitively through ``_write``.
+"""
+
+import os
+import threading
+
+
+class HotPath:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._fd = -1
+
+    def _write(self, data):
+        os.write(self._fd, data)
+        os.fsync(self._fd)
+
+    def flush(self):
+        with self._lock:
+            os.fsync(self._fd)
+
+    def save(self, data):
+        with self._lock:
+            self._write(data)

@@ -1,0 +1,27 @@
+"""Analyzer fixture: disciplined locking and metrics — zero findings.
+
+Locks nest strictly outer→inner, the blocking I/O happens outside the
+lock, and the metric is declared and guarded.
+"""
+
+import os
+import threading
+
+from repro import obs
+
+
+class Clean:
+    def __init__(self):
+        self._outer = threading.Lock()
+        self._inner = threading.Lock()
+        self._fd = -1
+        self.state = {}
+
+    def step(self, key):
+        with self._outer:
+            with self._inner:
+                self.state[key] = self.state.get(key, 0) + 1
+        os.fsync(self._fd)
+        reg = obs.registry()
+        if reg.enabled:
+            reg.counter("fixture_ops_total", op="step").inc()

@@ -1,0 +1,24 @@
+"""Analyzer fixture: a classic AB/BA lock-order inversion.
+
+``ping`` nests beta inside alpha; ``pong`` nests alpha inside beta —
+the acquisition graph has the 2-cycle alpha→beta→alpha.
+"""
+
+import threading
+
+
+class Inverted:
+    def __init__(self):
+        self._alpha = threading.Lock()
+        self._beta = threading.Lock()
+        self.n = 0
+
+    def ping(self):
+        with self._alpha:
+            with self._beta:
+                self.n += 1
+
+    def pong(self):
+        with self._beta:
+            with self._alpha:
+                self.n -= 1

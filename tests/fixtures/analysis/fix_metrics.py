@@ -1,0 +1,18 @@
+"""Analyzer fixture: metric-contract violations.
+
+``record`` emits a metric that is not in the catalog; ``count`` uses a
+declared name with the wrong label set; ``fine`` is fully declared.
+"""
+
+from repro import obs
+
+
+class Meter:
+    def record(self, ms):
+        obs.registry().histogram("fixture_undeclared_ms").observe(ms)
+
+    def count(self):
+        obs.registry().counter("fixture_ops_total", region="x").inc()
+
+    def fine(self):
+        obs.registry().counter("fixture_ops_total", op="read").inc()
