@@ -47,12 +47,15 @@ unchanged; cross-group ties are impossible — address ranges are disjoint).
 The absorbed group is *retired*: still addressable (health, checkpoint,
 resurrect), but it owns no ranges, takes no appends, and serves empty.
 
-**Demoted groups** merge by shipping run *manifests* instead of records
-(:func:`repro.tiered.merge_demoted`): the absorbed group's immutable run
-directories are copied file-level into the survivor's run set and a
-successor manifest is published — no segment decoding, no promotion.  A
-demoted *split* source is promoted first (a split must repartition
-postings, which requires the dynamic form).
+**Demoted groups** rebalance by shipping *runs* instead of records.  A
+cold merge copies the absorbed group's immutable run directories
+file-level into the survivor's run set and publishes a successor manifest
+(:func:`repro.tiered.merge_demoted`); a cold split ships **sliced run
+sets** (:func:`repro.tiered.split_demoted`): runs wholly on one side of
+the pivot are copied file-level, straddlers are cut by footer-index
+extents (postings masked by start address, content moved as raw
+compressed payloads), and both sides carry the full tombstone union — in
+neither direction is the group promoted or a record decoded.
 
 Failure model: fail-stop, same as the router.  If the source group loses
 its last live replica (or is demoted/retired under the migration), the
@@ -244,9 +247,16 @@ class Rebalancer:
         with w._ctx["rebalance_lock"]:
             grp = self._group(source)
             if grp.demoted is not None:
-                # a split repartitions postings by address, which needs the
-                # dynamic form — promote, then split hot
-                grp.promote()
+                # cold split: ship sliced run sets (footer-index
+                # subranges) — the group is never promoted or decoded
+                table: RoutingTable = w._ctx["table"]
+                try:
+                    with obs.span("rebalance.split", source=source,
+                                  demoted=True):
+                        return self._split_demoted_locked(grp, table, pivot)
+                except RebalanceAborted:
+                    self._record_abort("split-demoted")
+                    raise
             table: RoutingTable = w._ctx["table"]
             for idx in grp.replicas:
                 idx.set_merge_fence(_FENCE_ALL)
@@ -259,6 +269,112 @@ class Rebalancer:
             finally:
                 for idx in grp.replicas:
                     idx.set_merge_fence(-1)
+
+    def _split_demoted_locked(self, grp: ReplicaGroup, table: RoutingTable,
+                              pivot: Optional[int]) -> int:
+        """Split a *cold* group by shipping sliced run sets
+        (:func:`repro.tiered.split_demoted`): runs wholly on one side of
+        the pivot are copied file-level, straddlers are cut by
+        footer-index extents, and both sides carry the full tombstone
+        union — no promotion, no record decoding.  Cold groups take no
+        writes (a write would promote, and promotion needs the write lock
+        we hold), so holding the lock across the file I/O stalls no one.
+        """
+        from repro.core.static import StaticIndex
+        from repro.tiered import ManifestStore, StaticWarren, split_demoted
+
+        w = self.warren
+        source = grp.group_id
+        # pivot: the median document (record) boundary, read footer-only
+        ms = ManifestStore(grp.demoted)
+        sm = ms.load_latest_good()
+        if sm is None:
+            raise RebalanceAborted(
+                f"shard group {source} has no latest-good manifest in "
+                f"{grp.demoted!r}; routing table unchanged")
+        los: List[int] = []
+        for info in sm.runs:
+            si = StaticIndex(ms.run_path(info.name), w.tokenizer,
+                             w.featurizer)
+            los.extend(lo for lo, _ in si.record_bounds())
+            si.close()
+        los.sort()
+        if pivot is None:
+            if len(los) < 2:
+                raise RebalanceError(
+                    f"shard group {source} has {len(los)} documents — "
+                    "nothing to split")
+            pivot = los[len(los) // 2]
+        rng = table.range_containing(pivot)
+        if rng is None or rng[2] != source:
+            raise RebalanceError(
+                f"pivot {pivot} is not inside a range owned by group "
+                f"{source}")
+        rlo, rhi, _ = rng
+        if pivot <= rlo:
+            raise RebalanceError(f"pivot {pivot} at/below range base {rlo}")
+
+        new_gid = len(w.groups)
+        tok, feat = w.tokenizer, w.featurizer
+        fresh = table.fresh_stripe()
+        cursor = sm.next_addr
+        moved_alloc = pivot <= cursor < rhi
+        keep_dir = f"{grp.demoted}.e{grp.epoch + 1}.keep"
+        moved_dir = f"{grp.demoted}.e{grp.epoch + 1}.moved"
+
+        t0 = time.perf_counter()
+        with obs.span("swap", group=source), grp.write_lock:
+            if grp.demoted is None or grp.retired:
+                raise RebalanceAborted(
+                    f"shard group {source} was promoted/retired "
+                    "mid-migration; routing table unchanged")
+            grp.epoch += 1                    # BEFORE any state rewrite
+            try:
+                keep_m, moved_m = split_demoted(
+                    grp.demoted, keep_dir, moved_dir, pivot, rhi,
+                    keep_next_addr=fresh[0] if moved_alloc else cursor,
+                    moved_next_addr=cursor if moved_alloc else fresh[0],
+                    tokenizer=tok, featurizer=feat)
+                keep_static = StaticWarren(keep_dir, tok, feat)
+                moved_static = StaticWarren(moved_dir, tok, feat)
+            except BaseException:
+                # the file I/O failed AFTER the epoch bump: publish a
+                # same-topology successor so the epoch handshake re-syncs
+                # and the group keeps serving its untouched run set; the
+                # partially-built side directories are discarded
+                import shutil
+                shutil.rmtree(keep_dir, ignore_errors=True)
+                shutil.rmtree(moved_dir, ignore_errors=True)
+                epochs = list(table.group_epochs)
+                epochs[source] = grp.epoch
+                w._ctx["table"] = table.successor(group_epochs=epochs)
+                raise
+            # source keeps the complement side; pinned static clones keep
+            # serving the old run set (their mmaps outlive the swap)
+            grp.static = keep_static
+            grp.demoted = keep_dir
+            dest_replicas = [DynamicIndex(tok, feat, log_path=None)
+                             for _ in range(grp.n_replicas)]
+            dest_grp = ReplicaGroup(new_gid, dest_replicas)
+            dest_grp.demoted = moved_dir
+            dest_grp.static = moved_static
+            w.groups.append(dest_grp)
+            ranges = [r for r in table.ranges if r != rng]
+            ranges += [(rlo, pivot, source), (pivot, rhi, new_gid),
+                       (fresh[0], fresh[1],
+                        source if moved_alloc else new_gid)]
+            epochs = list(table.group_epochs) + [0]
+            epochs[source] = grp.epoch
+            w._ctx["table"] = table.successor(   # publish: swap complete
+                ranges=ranges,
+                write_groups=table.write_groups + (new_gid,),
+                group_epochs=epochs)
+        swap_s = time.perf_counter() - t0
+        self._record(RebalanceStats(
+            kind="split-demoted", source=source, dest=new_gid,
+            epoch=w._ctx["table"].epoch, pivot=pivot,
+            segments_streamed=len(moved_m.runs), swap_s=swap_s))
+        return new_gid
 
     def _split_locked(self, grp: ReplicaGroup, table: RoutingTable,
                       pivot: Optional[int]) -> int:

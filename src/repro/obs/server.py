@@ -16,6 +16,7 @@ default) serving read-only views of every observability surface:
     /routing               RoutingTable epoch/ranges + per-group state
     /autopilot/decisions   recent Decision records (?n=50)
     /tiered/runs           static-tier run sets (manifest + per-run info)
+    /tiered/cache          block-cache occupancy + hit/miss/admission stats
     /slo                   declared SLOs + multi-window burn rates
     /profile/cpu?seconds=N on-demand wall-clock sampling profile
                            (collapsed stacks, flamegraph-compatible)
@@ -51,8 +52,10 @@ class AdminServer:
 
     * ``warren``     — a ShardedWarren (``/routing``, ``/readyz``)
     * ``controller`` — an autopilot Controller (``/autopilot/decisions``)
-    * ``tiered``     — a TieredStore (``/tiered/runs``); without one, a
-      warren's demoted groups still report their run directories
+    * ``tiered``     — a TieredStore (``/tiered/runs``, ``/tiered/cache``);
+      without one, a warren's demoted groups still report their run
+      directories and ``/tiered/cache`` falls back to the process-default
+      block cache
     * ``slo``        — an SLOMonitor (``/slo``)
 
     ``start()`` binds (port 0 = ephemeral) and serves on daemon threads;
@@ -142,6 +145,8 @@ class AdminServer:
                 self._decisions(h, query)
             elif path == "/tiered/runs":
                 self._tiered_runs(h)
+            elif path == "/tiered/cache":
+                self._tiered_cache(h)
             elif path == "/slo":
                 self._slo(h)
             elif path == "/profile/cpu":
@@ -242,6 +247,13 @@ class AdminServer:
             return
         self._json(h, {"error": "no tiered store or warren attached"},
                    status=404)
+
+    def _tiered_cache(self, h) -> None:
+        cache = getattr(self.tiered, "block_cache", None)
+        if cache is None:
+            from repro.tiered import default_block_cache
+            cache = default_block_cache()
+        self._json(h, cache.stats())
 
     def _slo(self, h) -> None:
         if self.slo is None:

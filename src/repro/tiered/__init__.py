@@ -3,8 +3,11 @@
   manifest      versioned atomic-JSON manifests with latest-good recovery
   store         TieredStore / TieredSnapshot / TieredWarren / StaticWarren
                 + demote_index / resurrect_index (cold shard demotion)
-                + merge_demoted (manifest-shipping rebalance of cold groups)
-  compaction    background Compactor + pause-time metrics
+                + merge_demoted / split_demoted (manifest-shipping
+                rebalance of cold groups, sliced run sets — no promotion)
+  compaction    background Compactor + LeveledPolicy + pause-time metrics
+  cache         BlockCache: byte-capacity segmented-LRU with TinyLFU
+                admission, shared by every mmap'd v2 run reader
 
 Semantics.  A :class:`TieredWarren` exposes the *exact* Warren surface
 over a hot :class:`~repro.core.index.DynamicIndex` memtable plus N
@@ -33,6 +36,11 @@ Invariants the rest of the system leans on:
 * **Erasure is a point-set.**  Tombstones merge as a coalescing interval
   union across *all* tiers — an erase recorded in any tier hides content
   and annotations in every other tier, and survives run merges.
+* **Levels order recency.**  Leveled compaction keeps runs address-
+  disjoint within each level ``>= 1``; the read path merges deepest level
+  first, then ascending sequence, hot tier last, so exact-interval ties
+  still resolve newest-wins.  Erased content records are GC'd only when a
+  merge lands on the bottom level; tombstones are never dropped.
 
 Failure model: fail-stop with durable media.  Torn manifest writes are
 detected by crc and skipped (latest-good wins); a run directory missing
@@ -42,15 +50,19 @@ either never published (hot tier still owns the data) or published (the
 run owns it and the WAL copy is dropped at open).
 """
 
-from .compaction import CompactionMetrics, Compactor
+from repro.core.runfile import RunCorruption
+
+from .cache import BlockCache, default_block_cache, set_default_block_cache
+from .compaction import CompactionMetrics, Compactor, LeveledPolicy
 from .manifest import Manifest, ManifestCorrupt, ManifestStore, RunInfo
 from .store import (StaticRun, StaticWarren, TieredSnapshot, TieredStore,
                     TieredWarren, demote_index, merge_demoted,
-                    resurrect_index)
+                    resurrect_index, split_demoted)
 
 __all__ = [
-    "CompactionMetrics", "Compactor", "Manifest", "ManifestCorrupt",
-    "ManifestStore", "RunInfo", "StaticRun", "StaticWarren",
-    "TieredSnapshot", "TieredStore", "TieredWarren", "demote_index",
-    "merge_demoted", "resurrect_index",
+    "BlockCache", "CompactionMetrics", "Compactor", "LeveledPolicy",
+    "Manifest", "ManifestCorrupt", "ManifestStore", "RunCorruption",
+    "RunInfo", "StaticRun", "StaticWarren", "TieredSnapshot", "TieredStore",
+    "TieredWarren", "default_block_cache", "demote_index", "merge_demoted",
+    "resurrect_index", "set_default_block_cache", "split_demoted",
 ]

@@ -26,12 +26,18 @@ import zlib
 from dataclasses import asdict, dataclass, field, replace
 from typing import Dict, List, Optional
 
+from repro.core.faults import fault_point
+
 _MANIFEST_RE = re.compile(r"^MANIFEST-(\d{8})\.json$")
 
 
 @dataclass(frozen=True)
 class RunInfo:
-    """One immutable on-disk run, as recorded by the manifest."""
+    """One immutable on-disk run, as recorded by the manifest.
+
+    ``level`` and ``nbytes`` power the leveled compaction policy; they
+    default so manifests written before PR 10 still load (all runs at L0,
+    sizes re-measured lazily)."""
     run_id: int
     name: str            # directory name under <root>/runs/
     seq_lo: int
@@ -40,16 +46,21 @@ class RunInfo:
     addr_hi: int
     n_records: int
     n_features: int
+    level: int = 0       # 0 = freshly frozen; deeper = older, bigger
+    nbytes: int = 0      # on-disk size at write time (0: unknown/legacy)
 
     @staticmethod
-    def from_meta(run_id: int, name: str, meta: dict) -> "RunInfo":
-        """From a ``write_run``/``merge_runs`` meta record."""
+    def from_meta(run_id: int, name: str, meta: dict,
+                  level: int = 0) -> "RunInfo":
+        """From a ``write_run``/``merge_runs``/``slice_run`` meta record."""
         return RunInfo(run_id=run_id, name=name,
                        seq_lo=int(meta["seq_lo"]), seq_hi=int(meta["seq_hi"]),
                        addr_lo=int(meta["addr_lo"]),
                        addr_hi=int(meta["addr_hi"]),
                        n_records=int(meta["n_records"]),
-                       n_features=int(meta["n_features"]))
+                       n_features=int(meta["n_features"]),
+                       level=int(level),
+                       nbytes=int(meta.get("nbytes", 0)))
 
 
 @dataclass(frozen=True)
@@ -119,8 +130,10 @@ class ManifestStore:
         return sorted(out)
 
     def _run_intact(self, info: RunInfo) -> bool:
-        return os.path.exists(os.path.join(self.run_path(info.name),
-                                           "meta.msgpack"))
+        path = self.run_path(info.name)
+        # v2 block runs carry one file; legacy v1 runs key off meta.msgpack
+        return (os.path.exists(os.path.join(path, "run.aix2"))
+                or os.path.exists(os.path.join(path, "meta.msgpack")))
 
     # -- recovery --------------------------------------------------------- #
     def load_latest_good(self) -> Optional[Manifest]:
@@ -153,7 +166,9 @@ class ManifestStore:
             fh.write(manifest.to_json())
             fh.flush()
             os.fsync(fh.fileno())
+        fault_point("manifest.written")
         os.replace(tmp, final)
+        fault_point("manifest.published")
         for v in self._versions()[:-self.keep]:
             try:
                 os.unlink(os.path.join(self.directory,
@@ -166,8 +181,8 @@ class ManifestStore:
         """Remove run directories not referenced by ``live`` (orphans from a
         crash between run write and manifest swap, or victims of a finished
         compaction).  Readers pinning an older manifest keep serving: a
-        run's content is resident and its postings file handle stays valid
-        after unlink (POSIX semantics)."""
+        run's mmap and file handles stay valid after unlink (POSIX
+        semantics), so lazily decoded blocks remain readable."""
         referenced = {r.name for r in live.runs}
         removed = []
         for name in sorted(os.listdir(self.runs_dir)):

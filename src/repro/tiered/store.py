@@ -32,15 +32,18 @@ from typing import Dict, List, Optional, Tuple
 
 from repro import obs
 from repro.core.annotation import AnnotationList, merge_lists, union_intervals
+from repro.core.faults import fault_point
 from repro.core.featurizer import Featurizer, JsonFeaturizer
 from repro.core.gcl import GCLNode, Phrase, Term
 from repro.core.index import (DynamicIndex, Segment, Snapshot, Transaction,
                               _filter_erased, erased_overlaps, tokens_sources,
                               translate_sources)
-from repro.core.static import StaticIndex, merge_runs, write_run
+from repro.core.static import (StaticIndex, merge_runs, run_bytes, slice_run,
+                               write_carrier_run, write_run)
 from repro.core.tokenizer import Tokenizer, Utf8Tokenizer
 
-from .compaction import CompactionMetrics
+from .cache import BlockCache, default_block_cache
+from .compaction import CompactionMetrics, LeveledPolicy
 from .manifest import Manifest, ManifestStore, RunInfo
 
 
@@ -55,8 +58,10 @@ class StaticRun:
     @staticmethod
     def open(directory: str, info: RunInfo,
              tokenizer: Optional[Tokenizer] = None,
-             featurizer: Optional[Featurizer] = None) -> "StaticRun":
-        return StaticRun(StaticIndex(directory, tokenizer, featurizer),
+             featurizer: Optional[Featurizer] = None,
+             block_cache: Optional[BlockCache] = None) -> "StaticRun":
+        return StaticRun(StaticIndex(directory, tokenizer, featurizer,
+                                     block_cache=block_cache),
                          info, directory)
 
     def annotations(self, fval: int) -> AnnotationList:
@@ -74,14 +79,31 @@ class StaticRun:
         self.index.close()
 
 
+def replace_info_nbytes(run: StaticRun) -> RunInfo:
+    """A run's info with ``nbytes`` measured from disk — fills the size in
+    for runs recorded by pre-leveling manifests (legacy ``nbytes=0``)."""
+    from dataclasses import replace
+    return replace(run.info, nbytes=run_bytes(run.directory))
+
+
+def _sort_runs(runs) -> Tuple[StaticRun, ...]:
+    """Recency order for the k-way merge: deepest level first (oldest
+    data), then ascending sequence within a level, hot tier last — so on
+    exact interval ties the newest write wins, exactly the single-index
+    semantics, even when leveled compaction leaves interleaved levels."""
+    return tuple(sorted(runs, key=lambda r: (-r.info.level, r.info.seq_lo,
+                                             r.info.run_id)))
+
+
 class TieredSnapshot:
     """A consistent read view over N runs + (optionally) a hot snapshot.
 
     Merge semantics match the single-index :class:`Snapshot` exactly: lists
-    are merged in sequence order (runs ascending, hot last — so on exact
-    interval ties the newest write wins) and filtered by the coalescing
-    union of every tier's erased intervals, so tombstones in any tier hide
-    annotations and content in every other tier.
+    are merged in sequence order (runs deepest-level-first then ascending
+    sequence — see :func:`_sort_runs` — hot last, so on exact interval ties
+    the newest write wins) and filtered by the coalescing union of every
+    tier's erased intervals, so tombstones in any tier hide annotations and
+    content in every other tier.
     """
 
     def __init__(self, runs: Tuple[StaticRun, ...], hot: Optional[Snapshot]):
@@ -154,10 +176,13 @@ class TieredStore:
                  tokenizer: Optional[Tokenizer] = None,
                  featurizer: Optional[Featurizer] = None,
                  auto_merge_threshold: Optional[int] = 8,
-                 durable: bool = True):
+                 durable: bool = True,
+                 block_cache: Optional[BlockCache] = None):
         self.directory = directory
         self.tokenizer = tokenizer or Utf8Tokenizer()
         self.featurizer = featurizer or JsonFeaturizer()
+        self.block_cache = (block_cache if block_cache is not None
+                            else default_block_cache())
         os.makedirs(directory, exist_ok=True)
         self.manifests = ManifestStore(directory)
         m = self.manifests.load_latest_good()
@@ -165,9 +190,10 @@ class TieredStore:
             m = Manifest.initial()
         self.manifests.gc(m)        # torn runs from a crash never resurface
         self._manifest = m
-        self._runs: Tuple[StaticRun, ...] = tuple(
+        self._runs: Tuple[StaticRun, ...] = _sort_runs(
             StaticRun.open(self.manifests.run_path(i.name), i,
-                           self.tokenizer, self.featurizer)
+                           self.tokenizer, self.featurizer,
+                           block_cache=self.block_cache)
             for i in m.runs)
         wal = os.path.join(directory, "wal.log") if durable else None
         if wal is not None and os.path.exists(wal):
@@ -212,13 +238,19 @@ class TieredStore:
         it: manifest position plus one record per live run."""
         with self._view_lock:
             m, runs = self._manifest, self._runs
+        levels: Dict[int, int] = {}
+        for r in runs:
+            levels[r.info.level] = levels.get(r.info.level, 0) + 1
         return {
             "manifest": {"version": m.version,
                          "frozen_upto": m.frozen_upto},
             "n_runs": len(runs),
+            "levels": {str(k): v for k, v in sorted(levels.items())},
+            "cache": self.block_cache.stats(),
             "runs": [{
                 "run_id": r.info.run_id, "name": r.info.name,
                 "directory": r.directory,
+                "level": r.info.level, "nbytes": r.info.nbytes,
                 "seq_lo": r.info.seq_lo, "seq_hi": r.info.seq_hi,
                 "addr_lo": r.info.addr_lo, "addr_hi": r.info.addr_hi,
                 "n_records": r.info.n_records,
@@ -269,10 +301,11 @@ class TieredStore:
                                     runs=list(m.runs) + [info])
                 self.manifests.publish(new_m)   # durable BEFORE hot mutates
                 run = StaticRun.open(self.manifests.run_path(name), info,
-                                     self.tokenizer, self.featurizer)
+                                     self.tokenizer, self.featurizer,
+                                     block_cache=self.block_cache)
                 t0 = time.perf_counter()
                 with self._view_lock:
-                    self._runs = self._runs + (run,)
+                    self._runs = _sort_runs(self._runs + (run,))
                     hot.detach_segments(s)
                 self.metrics.note_freeze(time.perf_counter() - t0)
                 self._manifest = new_m
@@ -282,25 +315,33 @@ class TieredStore:
             hot.compact_log()          # WAL forgets the frozen segments
             return info
 
-    # -- merge: N runs -> 1 ----------------------------------------------- #
+    # -- merge: N runs -> 1 (full, bottom-level) -------------------------- #
     def compact_runs(self, min_runs: int = 2) -> Optional[RunInfo]:
-        """Merge every live run into one, GC'ing erased records.  No-op
-        below ``min_runs``.  Pinned snapshots keep serving the victim runs
-        (content resident, postings fd valid past unlink)."""
+        """Merge every live run into one bottom-level run, GC'ing erased
+        records.  No-op below ``min_runs``.  The drain/final-compaction
+        path; steady-state maintenance uses :meth:`compact_level`.  Pinned
+        snapshots keep serving the victim runs (postings and content reach
+        the unlinked file through its still-open mmap)."""
         with self._maint_lock, obs.span("tiered.merge"):
             victims = self._runs
             if len(victims) < max(2, min_runs):
                 return None
+            out_level = max(v.info.level for v in victims)
+            ordered = sorted(victims,
+                             key=lambda r: (-r.info.level, r.info.seq_lo,
+                                            r.info.run_id))
             m = self._manifest
             name = f"run_{m.next_run_id:08d}"
-            meta = merge_runs([v.directory for v in victims],
+            meta = merge_runs([v.directory for v in ordered],
                               self.manifests.run_path(name))
-            info = RunInfo.from_meta(m.next_run_id, name, meta)
+            info = RunInfo.from_meta(m.next_run_id, name, meta,
+                                     level=out_level)
             new_m = m.successor(next_run_id=m.next_run_id + 1,
                                 runs=[info])
             self.manifests.publish(new_m)
             run = StaticRun.open(self.manifests.run_path(name), info,
-                                 self.tokenizer, self.featurizer)
+                                 self.tokenizer, self.featurizer,
+                                 block_cache=self.block_cache)
             t0 = time.perf_counter()
             with self._view_lock:
                 self._runs = (run,)
@@ -309,6 +350,53 @@ class TieredStore:
             # victims are dropped, not closed: snapshots pinning them keep
             # serving, and each run's fd closes when its last reference
             # dies (StaticIndex.__del__)
+            self.manifests.gc(new_m)
+            self._gauge_runs()
+            return info
+
+    # -- leveled, overlap-aware compaction -------------------------------- #
+    def compact_level(self, policy: Optional[LeveledPolicy] = None
+                      ) -> Optional[RunInfo]:
+        """One leveled compaction step (see :class:`LeveledPolicy`): fold
+        the picked victims into one run at the output level.  Erased
+        records are GC'd only when the output lands on the bottom level
+        (no surviving run is deeper); upper-level merges keep them so the
+        reclaim happens once, at the bottom.  Returns the new run's info,
+        or None when no level is over target."""
+        policy = policy or LeveledPolicy()
+        with self._maint_lock, obs.span("tiered.compact_level"):
+            runs = self._runs
+            infos = [r.info if r.info.nbytes
+                     else replace_info_nbytes(r) for r in runs]
+            picked = policy.pick(infos)
+            if picked is None:
+                return None
+            victims_info, out_level = picked
+            victim_ids = {i.run_id for i in victims_info}
+            vmap = {r.info.run_id: r for r in runs}
+            victims = [vmap[i.run_id] for i in victims_info]
+            survivors = [i for i in self._manifest.runs
+                         if i.run_id not in victim_ids]
+            gc = not any(i.level > out_level for i in survivors)
+            m = self._manifest
+            name = f"run_{m.next_run_id:08d}"
+            meta = merge_runs([v.directory for v in victims],
+                              self.manifests.run_path(name), gc_records=gc)
+            info = RunInfo.from_meta(m.next_run_id, name, meta,
+                                     level=out_level)
+            new_m = m.successor(next_run_id=m.next_run_id + 1,
+                                runs=survivors + [info])
+            self.manifests.publish(new_m)
+            run = StaticRun.open(self.manifests.run_path(name), info,
+                                 self.tokenizer, self.featurizer,
+                                 block_cache=self.block_cache)
+            t0 = time.perf_counter()
+            with self._view_lock:
+                self._runs = _sort_runs(
+                    tuple(r for r in self._runs
+                          if r.info.run_id not in victim_ids) + (run,))
+            self.metrics.note_merge(time.perf_counter() - t0)
+            self._manifest = new_m
             self.manifests.gc(new_m)
             self._gauge_runs()
             return info
@@ -330,6 +418,13 @@ class TieredStore:
         reg.gauge("tiered_runs", "live static runs").set(len(runs))
         reg.gauge("tiered_run_bytes",
                   "on-disk bytes across live static runs").set(total)
+        by_level: Dict[int, int] = {}
+        for r in runs:
+            by_level[r.info.level] = by_level.get(r.info.level, 0) + 1
+        for level, n in by_level.items():
+            reg.gauge("tiered_level_runs",
+                      "live static runs per compaction level",
+                      level=str(level)).set(n)
 
     def close(self) -> None:
         for run in self._runs:
@@ -530,7 +625,9 @@ def resurrect_index(directory: str, tokenizer: Optional[Tokenizer] = None,
     if m is None:
         raise FileNotFoundError(f"no manifest in {directory}")
     records = []
-    for info in m.runs:
+    # deepest level first, then ascending sequence — recency order, so
+    # resurrected segments keep last-wins semantics on exact ties
+    for info in sorted(m.runs, key=lambda i: (-i.level, i.seq_lo, i.run_id)):
         si = StaticIndex(ms.run_path(info.name), tokenizer, featurizer)
         records.append(si.to_segment().to_record())
         si.close()
@@ -600,6 +697,106 @@ def merge_demoted(dst_dir: str, src_dir: str) -> Manifest:
     return new
 
 
+_SPLIT_CEILING = 1 << 62     # default upper fence for the moved window
+
+
+def split_demoted(src_dir: str, keep_dir: str, moved_dir: str,
+                  lo: int, hi: int = _SPLIT_CEILING,
+                  keep_next_addr: Optional[int] = None,
+                  moved_next_addr: Optional[int] = None,
+                  tokenizer: Optional[Tokenizer] = None,
+                  featurizer: Optional[Featurizer] = None
+                  ) -> Tuple[Manifest, Manifest]:
+    """Split one demoted run set at the address window ``[lo, hi)`` into
+    two fresh run sets — **without promoting or decoding** the cold group.
+    ``moved_dir`` receives the window; ``keep_dir`` its complement (a
+    group may own several address ranges, so the keep side is not
+    contiguous).
+
+    Every run wholly on one side is copied file-level; a run straddling
+    the window is cut by :func:`~repro.core.static.slice_run` (postings
+    masked by start address, content shipped as raw footer-index extents,
+    no decompression).  Both sides receive the source's *full* tombstone
+    union — a tombstone recorded in a keep-side run may cover moved-side
+    addresses and vice versa — via the sliced runs' erased override plus
+    an erased-carrier run for any side that only got whole-run copies.
+
+    Crash safety: the source directory is never touched; both sides are
+    built fresh and published (keep side first); ``split.shipped`` fires
+    after both are durable.  A crash mid-build leaves the source
+    latest-good and partial side directories for the caller to discard.
+    Allocation floors: each side's manifest records the floor the caller
+    assigns (``*_next_addr``, default the source's own floor — safe,
+    allocation is monotone, but the routing layer should hand the side
+    that lost the cursor a fresh stripe base).
+    """
+    from dataclasses import replace as _replace
+
+    sms = ManifestStore(src_dir)
+    sm = sms.load_latest_good()
+    if sm is None:
+        raise FileNotFoundError(f"no manifest in {src_dir}")
+    erased_pieces = []
+    for info in sm.runs:
+        si = StaticIndex(sms.run_path(info.name), tokenizer, featurizer)
+        erased_pieces.append(si.erased)
+        si.close()
+    erased = union_intervals(erased_pieces)
+
+    def build_side(directory: str, moved_side: bool,
+                   next_addr: int) -> Manifest:
+        import shutil
+        ms = ManifestStore(directory)
+        runs: List[RunInfo] = []
+        next_id = 0
+        carried_erased = False
+        for info in sm.runs:
+            inside = lo <= info.addr_lo and info.addr_hi < hi
+            outside = info.addr_hi < lo or info.addr_lo >= hi
+            name = f"run_{next_id:08d}"
+            target = ms.run_path(name)
+            if os.path.exists(target):       # leftover of a crashed build
+                shutil.rmtree(target)
+            if inside if moved_side else outside:
+                # wholly on this side: raw file-level copy, no slicing
+                shutil.copytree(sms.run_path(info.name), target)
+                runs.append(_replace(info, run_id=next_id, name=name))
+                next_id += 1
+            elif outside if moved_side else inside:
+                continue                     # wholly on the other side
+            else:
+                meta = slice_run(sms.run_path(info.name), target, lo, hi,
+                                 erased_override=erased,
+                                 invert=not moved_side)
+                if meta is None:
+                    continue
+                runs.append(RunInfo.from_meta(next_id, name, meta,
+                                              level=info.level))
+                carried_erased = True
+                next_id += 1
+        if not carried_erased and len(erased):
+            # whole-run copies only: ship the tombstone union separately
+            name = f"run_{next_id:08d}"
+            meta = write_carrier_run(ms.run_path(name), erased)
+            runs.append(RunInfo.from_meta(next_id, name, meta))
+            next_id += 1
+        m = Manifest.initial().successor(
+            frozen_upto=sm.frozen_upto, next_run_id=next_id,
+            next_addr=next_addr, next_seq=sm.next_seq, runs=runs)
+        ms.publish(m)
+        ms.gc(m)
+        return m
+
+    keep_m = build_side(keep_dir, False,
+                        keep_next_addr if keep_next_addr is not None
+                        else sm.next_addr)
+    moved_m = build_side(moved_dir, True,
+                         moved_next_addr if moved_next_addr is not None
+                         else sm.next_addr)
+    fault_point("split.shipped")
+    return keep_m, moved_m
+
+
 class StaticWarren(_SnapshotReads):
     """Read-only Warren surface over a demoted run set (no hot tier).
 
@@ -611,21 +808,25 @@ class StaticWarren(_SnapshotReads):
     def __init__(self, directory: str,
                  tokenizer: Optional[Tokenizer] = None,
                  featurizer: Optional[Featurizer] = None,
-                 _shared: Optional[tuple] = None):
+                 _shared: Optional[tuple] = None,
+                 block_cache: Optional[BlockCache] = None):
         self.directory = directory
         self.tokenizer = tokenizer or Utf8Tokenizer()
         self.featurizer = featurizer or JsonFeaturizer()
         if _shared is not None:
             self.manifest, self._runs = _shared
         else:
+            cache = (block_cache if block_cache is not None
+                     else default_block_cache())
             ms = ManifestStore(directory)
             m = ms.load_latest_good()
             if m is None:
                 raise FileNotFoundError(f"no manifest in {directory}")
             self.manifest = m
-            self._runs = tuple(
+            self._runs = _sort_runs(
                 StaticRun.open(ms.run_path(i.name), i, self.tokenizer,
-                               self.featurizer) for i in m.runs)
+                               self.featurizer, block_cache=cache)
+                for i in m.runs)
         self._snapshot = None
 
     @property

@@ -282,6 +282,47 @@ def test_merge_demoted_groups_ships_manifests_not_records(tmp_path):
         _assert_search_parity(sharded, single)
 
 
+def test_split_demoted_ships_sliced_runs_no_promotion(tmp_path):
+    """A demoted split ships sliced run sets: neither side is promoted,
+    both sides stay cold with zero in-memory segments, tombstones recorded
+    before demotion hide content on whichever side they landed, and the
+    family is bit-identical to the single-index oracle."""
+    sharded = ShardedWarren(n_shards=2, replicas=2,
+                            static_dir=str(tmp_path))
+    single = Warren(DynamicIndex())
+    _ingest(sharded, range(100))
+    _ingest(single, range(100))
+    for d in ("d3", "d40"):
+        _erase_doc(sharded, d)
+        _erase_doc(single, d)
+    sharded.demote_group(0)
+    rb = Rebalancer(sharded)
+    new_gid = rb.split_group(0)
+    assert rb.last_stats.kind == "split-demoted"
+    assert rb.last_stats.segments_streamed >= 1
+    src, dst = sharded.groups[0], sharded.groups[new_gid]
+    assert src.demoted is not None and dst.demoted is not None
+    for grp in (src, dst):
+        assert all(len(r._segments) == 0 for r in grp.replicas)
+    with sharded, single:
+        assert len(sharded.annotations(":")) == 98
+        for f in (":", "docid:d5", "docid:d42", "docid:d3"):
+            assert _annotation_view(sharded, f) == _annotation_view(single, f)
+        _assert_search_parity(sharded, single)
+    # tombstones recorded after the split land on the owning side only
+    for d in ("d7", "d50"):
+        _erase_doc(sharded, d)
+        _erase_doc(single, d)
+    # both sides keep serving and keep allocating without collisions
+    _ingest(sharded, range(500, 540))
+    _ingest(single, range(500, 540))
+    with sharded, single:
+        assert len(sharded.annotations(":")) == 136
+        for f in (":", "docid:d520", "docid:d7"):
+            assert _annotation_view(sharded, f) == _annotation_view(single, f)
+        _assert_search_parity(sharded, single)
+
+
 def test_routing_table_survives_checkpoint_restore(tmp_path):
     sharded, single = _pair(n_docs=80)
     rb = Rebalancer(sharded)

@@ -1,0 +1,202 @@
+"""v2 block-run format robustness: fuzzed corruption is always *typed*,
+and the v1 four-file layout stays readable (and upgradeable) forever.
+
+The corruption contract: any truncation or bit flip of ``run.aix2``
+either surfaces as :class:`repro.core.runfile.RunCorruption` (from open
+or from any later lazy block read) or leaves every read bit-identical to
+the pristine run (a flip in dead bytes, e.g. block zero-padding) — the
+reader never returns garbage and never dies with an untyped error.
+
+Back-compat: ``tests/fixtures/v1_run`` is a committed v1 layout (written
+by the pre-block writer).  It must keep opening read-only with exact
+contents, and one ``merge_runs`` pass must upgrade it to v2 losslessly —
+that migration (open v1, compact, serve v2) is the only upgrade story.
+"""
+
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import DynamicIndex, Warren, index_document, score_bm25
+from repro.core.runfile import RUN_FILE, RunCorruption
+from repro.core.static import (StaticIndex, _write_static_v1, merge_runs,
+                               write_static)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures", "v1_run")
+
+
+def _build_index(n=12, erased=("d3",)):
+    idx = DynamicIndex()
+    w = Warren(idx)
+    with w:
+        w.transaction()
+        for i in range(n):
+            index_document(w, f"fuzz target doc {i} shared words fox",
+                           docid=f"d{i}")
+        w.commit()
+    for d in erased:
+        with w:
+            lst = w.annotations("docid:" + d)
+            w.transaction()
+            w.erase(int(lst.starts[0]), int(lst.ends[0]))
+            w.commit()
+    return idx
+
+
+def _full_read(directory):
+    """Every read surface the run offers, as one comparable value."""
+    si = StaticIndex(directory)
+    try:
+        out = []
+        docs = si.annotations(":")
+        for i in range(len(docs)):
+            p, q = int(docs.starts[i]), int(docs.ends[i])
+            out.append((p, q, si.translate(p, q), tuple(si.tokens(p, q))))
+        for f in sorted(si.features()):
+            lst = si.annotations(f)
+            out.append((f, lst.starts.tolist(), lst.ends.tolist(),
+                        lst.values.tolist()))
+        er = si.erased
+        out.append(("erased", er.starts.tolist(), er.ends.tolist()))
+        out.append(("bm25", [(d, round(s, 12))
+                             for d, s in score_bm25(si, "shared fox", k=5)]))
+        return out
+    finally:
+        si.close()
+
+
+@pytest.fixture(scope="module")
+def pristine(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("fmt") / "run")
+    write_static(_build_index(), d)
+    return d, _full_read(d)
+
+
+def _corrupt_copy(pristine_dir, tmp, name, mutate):
+    d = str(tmp / name)
+    shutil.copytree(pristine_dir, d)
+    path = os.path.join(d, RUN_FILE)
+    with open(path, "rb") as fh:
+        raw = bytearray(fh.read())
+    raw = mutate(raw)
+    with open(path, "wb") as fh:
+        fh.write(bytes(raw))
+    return d
+
+
+def test_truncation_at_any_point_is_typed_corruption(pristine, tmp_path):
+    d, _ = pristine
+    size = os.path.getsize(os.path.join(d, RUN_FILE))
+    rng = np.random.default_rng(0)
+    cuts = sorted({0, 1, size // 2, size - 1, size - 8, size - 24}
+                  | {int(x) for x in rng.integers(0, size, 20)})
+    for cut in cuts:
+        work = _corrupt_copy(d, tmp_path, f"t{cut}", lambda b: b[:cut])
+        # truncation always removes the trailer -> open itself must fail
+        with pytest.raises(RunCorruption):
+            StaticIndex(work)
+
+
+def test_single_bit_flips_never_produce_garbage(pristine, tmp_path):
+    d, want = pristine
+    size = os.path.getsize(os.path.join(d, RUN_FILE))
+    rng = np.random.default_rng(1)
+    offsets = sorted({0, size - 1, size - 10}
+                     | {int(x) for x in rng.integers(0, size, 40)})
+    survived = corrupted = 0
+    for off in offsets:
+        bit = int(rng.integers(0, 8))
+
+        def flip(b, off=off, bit=bit):
+            b[off] ^= 1 << bit
+            return b
+
+        work = _corrupt_copy(d, tmp_path, f"b{off}_{bit}", flip)
+        try:
+            got = _full_read(work)
+        except RunCorruption:
+            corrupted += 1
+        else:
+            # a flip in dead bytes (block padding) is allowed ONLY if every
+            # read stays bit-identical to the pristine run
+            assert got == want, f"garbage after flipping bit {bit} @ {off}"
+            survived += 1
+    assert corrupted > 0        # the fuzz actually hit live bytes
+
+
+def test_extra_garbage_file_in_run_dir_is_ignored(pristine, tmp_path):
+    d, want = pristine
+    work = str(tmp_path / "extra")
+    shutil.copytree(d, work)
+    with open(os.path.join(work, "stray.tmp"), "wb") as fh:
+        fh.write(b"leftover from a crashed writer")
+    assert _full_read(work) == want
+
+
+def test_empty_or_alien_file_is_typed_corruption(tmp_path):
+    d = str(tmp_path / "alien")
+    os.makedirs(d)
+    with open(os.path.join(d, RUN_FILE), "wb") as fh:
+        fh.write(b"not a block run at all")
+    with pytest.raises(RunCorruption):
+        StaticIndex(d)
+    with pytest.raises(RunCorruption):
+        StaticIndex(str(tmp_path / "missing"))   # no layout at all
+
+
+# ------------------------------------------------------------------ #
+# v1 back-compat: the committed fixture opens forever
+# ------------------------------------------------------------------ #
+def test_v1_fixture_opens_read_only():
+    si = StaticIndex(FIXTURE)
+    try:
+        docs = si.annotations(":")
+        assert len(docs) == 5                 # 6 written, d2 erased
+        texts = {si.translate(int(docs.starts[i]), int(docs.ends[i]))
+                 for i in range(len(docs))}
+        assert texts == {f"fixture doc {i} frozen in the v1 layout"
+                         for i in (0, 1, 3, 4, 5)}
+        assert len(si.annotations("docid:d2")) == 0     # erased stays erased
+        assert len(si.erased) == 1
+        top = score_bm25(si, "fixture frozen", k=3)
+        assert len(top) == 3
+    finally:
+        si.close()
+
+
+def test_v1_fixture_upgrades_to_v2_via_merge(tmp_path):
+    out = str(tmp_path / "v2")
+    merge_runs([FIXTURE], out)
+    assert os.path.exists(os.path.join(out, RUN_FILE))
+    v1 = StaticIndex(FIXTURE)
+    v2 = StaticIndex(out)
+    try:
+        for f in (":", "docid:d0", "docid:d2", "fixture"):
+            a, b = v1.annotations(f), v2.annotations(f)
+            np.testing.assert_array_equal(a.starts, b.starts)
+            np.testing.assert_array_equal(a.ends, b.ends)
+            np.testing.assert_array_equal(a.values, b.values)
+        docs = v1.annotations(":")
+        for i in range(len(docs)):
+            p, q = int(docs.starts[i]), int(docs.ends[i])
+            assert v1.translate(p, q) == v2.translate(p, q)
+        np.testing.assert_array_equal(v1.erased.starts, v2.erased.starts)
+        np.testing.assert_array_equal(v1.erased.ends, v2.erased.ends)
+    finally:
+        v1.close()
+        v2.close()
+
+
+def test_v1_writer_and_v2_writer_agree(tmp_path):
+    """The retained v1 writer and the v2 writer produce bit-identical
+    read surfaces for the same index (the fixture generator stays
+    honest)."""
+    idx = _build_index(n=8)
+    d1, d2 = str(tmp_path / "v1"), str(tmp_path / "v2")
+    _write_static_v1(idx, d1)
+    write_static(idx, d2)
+    assert os.path.exists(os.path.join(d1, "meta.msgpack"))
+    assert os.path.exists(os.path.join(d2, RUN_FILE))
+    assert _full_read(d1) == _full_read(d2)
